@@ -1,0 +1,441 @@
+"""Benchmark harness — one function per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV to stdout (derived = the claim
+check for that artifact) and writes full curves to benchmarks/out/*.csv.
+
+  fig2_local        FedNL & N0 vs GD/DIANA/ADIANA/DINGO, bits to 1e-6
+  fig2_global       FedNL-LS/N0-LS/FedNL-CR vs first-order, from far
+  fig2_nl1          FedNL (Rank-1/Top-K/PowerSGD) vs NL1
+  fig3_compression  Rank-R / Top-K / PowerSGD level sweep
+  fig4_options      Option 1 vs Option 2
+  fig6_update_rules alpha rules (Top-K a=1, a=1-sqrt(1-d), Rand-K 1/(w+1))
+  fig7_bc           FedNL-BC compression-level sweep + vs DORE
+  fig9_pp           FedNL-PP tau sweep + vs Artemis
+  fig14_heterogeneity  synthetic(alpha, beta) sweep
+  table2_rates      Thm 3.6 / NS / N0 rate checks
+  roofline          (arch x shape) table from the dry-run JSONL
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+# The paper's separation between Newton-type and first-order methods shows
+# at deep accuracy (superlinear regime); run the convex benchmarks in f64.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (bits_to_accuracy, gaps, problem,
+                               rounds_to_accuracy, write_csv)
+from repro.core import (FedNL, FedNLBC, FedNLCR, FedNLLS, FedNLPP, Identity,
+                        PowerSGD, RandK, RandomDithering, RankR, TopK, Zero)
+from repro.core.baselines import (Adiana, Artemis, Diana, Dingo, Dore, NL1,
+                                  gd_ls_run, gd_run)
+from repro.core.compressors import FLOAT_BITS
+from repro.core.newton import fixed_hessian_run, n0_ls_run
+
+RESULTS = []
+TARGET = 1e-12
+
+
+def report(name, us_per_call, derived):
+    RESULTS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def _near_x0(prob, scale=0.05, seed=1):
+    return prob["xstar"] + scale * jax.random.normal(
+        jax.random.PRNGKey(seed), (prob["d"],))
+
+
+def _run(alg_run, *args, **kw):
+    t0 = time.time()
+    out = alg_run(*args, **kw)
+    jax.block_until_ready(out[1])
+    return out, (time.time() - t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig2_local(fast=False):
+    prob = problem("a1a")
+    d, n = prob["d"], prob["n"]
+    x0 = _near_x0(prob)
+    rounds = 60 if fast else 150
+    rows = []
+
+    fednl = FedNL(prob["grad"], prob["hess"], RankR(1), option=1, mu=1e-3)
+    (final, xs), us = _run(fednl.run, x0, n, 25)
+    g = gaps(prob, xs)
+    b_fednl = bits_to_accuracy(g, fednl.bits_per_round(d), TARGET,
+                               fednl.init_bits(d))
+    rows += [("FedNL-Rank1", k * fednl.bits_per_round(d) + fednl.init_bits(d),
+              float(v)) for k, v in enumerate(g)]
+
+    h0 = jnp.mean(prob["hess"](x0), axis=0)
+    (_, xs_n0), _ = _run(fixed_hessian_run, x0, h0, prob["grad"], 40)
+    g_n0 = gaps(prob, xs_n0)
+    b_n0 = bits_to_accuracy(g_n0, d * FLOAT_BITS, TARGET, fednl.init_bits(d))
+
+    (_, xs_gd), _ = _run(gd_run, x0, prob["grad"], 1.0 / prob["consts"]["L"],
+                         rounds * 40)
+    b_gd = bits_to_accuracy(gaps(prob, xs_gd), d * FLOAT_BITS, TARGET)
+
+    rd = RandomDithering(s=int(d ** 0.5))
+    om = rd.omega_for((d,))
+    diana = Diana(prob["grad"], rd, prob["consts"]["L"], n, om)
+    (_, xs_di), _ = _run(diana.run, x0, n, rounds * 10)
+    b_diana = bits_to_accuracy(gaps(prob, xs_di), diana.bits_per_round(d),
+                               TARGET)
+
+    adiana = Adiana(prob["grad"], rd, prob["consts"]["L"], 1e-3, n, om)
+    (_, xs_ad), _ = _run(adiana.run, x0, n, rounds * 10)
+    b_adiana = bits_to_accuracy(gaps(prob, xs_ad), adiana.bits_per_round(d),
+                                TARGET)
+
+    dingo = Dingo(prob["val"], prob["grad"], prob["hess"])
+    (_, xs_dg), _ = _run(dingo.run, x0, 40)
+    b_dingo = bits_to_accuracy(gaps(prob, xs_dg), dingo.bits_per_round(d),
+                               TARGET)
+
+    write_csv("fig2_local", ["method", "bits", "gap"], rows)
+    best_fo = min(b_gd, b_diana, b_adiana)
+    claim = (b_fednl < best_fo) and (b_n0 < best_fo) and (b_fednl < b_dingo)
+    report("fig2_local", us,
+           f"bits(FedNL)={b_fednl:.2e}|N0={b_n0:.2e}|GD={b_gd:.2e}|"
+           f"DIANA={b_diana:.2e}|ADIANA={b_adiana:.2e}|DINGO={b_dingo:.2e}|"
+           f"claim_fednl_beats_all={claim}")
+
+
+def fig2_global(fast=False):
+    prob = problem("a1a")
+    d, n = prob["d"], prob["n"]
+    x0 = jnp.ones(d) * 2.0
+    rounds = 40 if fast else 80
+
+    ls = FedNLLS(prob["val"], prob["grad"], prob["hess"], RankR(1), mu=1e-3)
+    (_, xs_ls), us = _run(ls.run, x0, n, rounds)
+    b_ls = bits_to_accuracy(gaps(prob, xs_ls), ls.bits_per_round(d), TARGET,
+                            d * (d + 1) // 2 * FLOAT_BITS)
+
+    h0 = jnp.mean(prob["hess"](x0), axis=0)
+    (_, xs_n0ls), _ = _run(n0_ls_run, x0, h0, prob["val"], prob["grad"],
+                           rounds, 1e-3)
+    b_n0ls = bits_to_accuracy(gaps(prob, xs_n0ls), d * FLOAT_BITS, TARGET,
+                              d * (d + 1) // 2 * FLOAT_BITS)
+
+    cr = FedNLCR(prob["grad"], prob["hess"], RankR(1),
+                 l_star=prob["consts"]["L_star"])
+    (_, xs_cr), _ = _run(cr.run, x0, n, rounds * 4)
+    b_cr = bits_to_accuracy(gaps(prob, xs_cr), cr.bits_per_round(d), TARGET)
+
+    (_, xs_gd), _ = _run(gd_run, x0, prob["grad"], 1.0 / prob["consts"]["L"],
+                         rounds * 20)
+    b_gd = bits_to_accuracy(gaps(prob, xs_gd), d * FLOAT_BITS, TARGET)
+    (_, xs_gls), _ = _run(gd_ls_run, x0, prob["val"], prob["grad"], rounds * 20)
+    b_gdls = bits_to_accuracy(gaps(prob, xs_gls), d * FLOAT_BITS, TARGET)
+
+    rd = RandomDithering(s=int(d ** 0.5))
+    om = rd.omega_for((d,))
+    diana = Diana(prob["grad"], rd, prob["consts"]["L"], n, om)
+    (_, xs_di), _ = _run(diana.run, x0, n, rounds * 20)
+    b_diana = bits_to_accuracy(gaps(prob, xs_di), diana.bits_per_round(d),
+                               TARGET)
+
+    claim = (b_ls < min(b_gd, b_gdls, b_diana)) and \
+        (b_n0ls < min(b_gd, b_gdls)) and (b_cr < min(b_gd, b_gdls))
+    report("fig2_global", us,
+           f"bits(FedNL-LS)={b_ls:.2e}|N0-LS={b_n0ls:.2e}|FedNL-CR={b_cr:.2e}|"
+           f"GD={b_gd:.2e}|GD-LS={b_gdls:.2e}|DIANA={b_diana:.2e}|"
+           f"claim_ls_beats_first_order={claim}")
+
+
+def fig2_nl1(fast=False):
+    prob = problem("a1a")
+    d, n = prob["d"], prob["n"]
+    # start far enough that the Hessian-learning transient matters (NL1
+    # must re-learn m coefficients per silo at K=1/round)
+    x0 = _near_x0(prob, scale=0.3)
+    compressors = {
+        "Rank1": RankR(1),
+        f"Top{d}": TopK(k=d),
+        "PowerSGD1": PowerSGD(r=1, iters=2),
+    }
+    bits = {}
+    us = 0.0
+    for name, comp in compressors.items():
+        alg = FedNL(prob["grad"], prob["hess"], comp, option=1, mu=1e-3)
+        (_, xs), u = _run(alg.run, x0, n, 40)
+        us += u
+        bits[name] = bits_to_accuracy(gaps(prob, xs), alg.bits_per_round(d),
+                                      TARGET, alg.init_bits(d))
+    nl1 = NL1(prob["data"], k=1)
+    (_, xs), _ = _run(nl1.run, x0, 400 if not fast else 150)
+    bits["NL1-Rand1"] = bits_to_accuracy(gaps(prob, xs),
+                                         nl1.bits_per_round(d), TARGET,
+                                         d * (d + 1) // 2 * FLOAT_BITS)
+    fednl_best = min(v for k, v in bits.items() if k != "NL1-Rand1")
+    claim = (fednl_best < bits["NL1-Rand1"]
+             and bits["Rank1"] < bits["NL1-Rand1"])
+    report("fig2_nl1", us,
+           "|".join(f"{k}={v:.2e}" for k, v in bits.items())
+           + f"|claim_fednl_beats_nl1={claim}")
+
+
+def fig3_compression(fast=False):
+    prob = problem("phishing")
+    d, n = prob["d"], prob["n"]
+    x0 = _near_x0(prob)
+    rows = []
+    us = 0.0
+    verdicts = []
+    for fam, levels in [("RankR", [1, 2, 4]),
+                        ("TopK", [d, 4 * d, 16 * d]),
+                        ("PowerSGD", [1, 2, 4])]:
+        bl = {}
+        for lvl in levels:
+            comp = {"RankR": lambda l: RankR(l),
+                    "TopK": lambda l: TopK(k=l),
+                    "PowerSGD": lambda l: PowerSGD(r=l, iters=2)}[fam](lvl)
+            alg = FedNL(prob["grad"], prob["hess"], comp, option=1, mu=1e-3)
+            (_, xs), u = _run(alg.run, x0, n, 40)
+            us += u
+            bl[lvl] = bits_to_accuracy(gaps(prob, xs), alg.bits_per_round(d),
+                                       TARGET, alg.init_bits(d))
+            rows.append((fam, lvl, bl[lvl]))
+        verdicts.append(bl[levels[0]] <= bl[levels[-1]])
+    write_csv("fig3_compression", ["family", "level", "bits"], rows)
+    report("fig3_compression", us,
+           f"rows={len(rows)}|claim_smaller_level_better={all(verdicts)}")
+
+
+def fig4_options(fast=False):
+    prob = problem("a1a")
+    d, n = prob["d"], prob["n"]
+    x0 = _near_x0(prob)
+    out = {}
+    us = 0.0
+    for opt in (1, 2):
+        alg = FedNL(prob["grad"], prob["hess"], RankR(1), option=opt, mu=1e-3)
+        (_, xs), u = _run(alg.run, x0, n, 120)
+        us += u
+        out[opt] = bits_to_accuracy(gaps(prob, xs), alg.bits_per_round(d),
+                                    TARGET, alg.init_bits(d))
+    report("fig4_options", us,
+           f"opt1={out[1]:.2e}|opt2={out[2]:.2e}|"
+           f"claim_opt1_not_worse={out[1] <= out[2] * 1.01}")
+
+
+def fig6_update_rules(fast=False):
+    prob = problem("phishing")
+    d, n = prob["d"], prob["n"]
+    x0 = _near_x0(prob, scale=0.3)
+    k = d // 2
+    topk = TopK(k=k)
+    delta = topk.delta_for((d, d))
+    randk = RandK(k=k)
+    omega = randk.omega_for((d, d))
+    rules = {
+        "topk_a1": (topk, 1.0),
+        "topk_contract": (topk, 1.0 - (1.0 - delta) ** 0.5),
+        "randk_unbiased": (randk, 1.0 / (1.0 + omega)),
+    }
+    rounds_out = {}
+    us = 0.0
+    for name, (comp, alpha) in rules.items():
+        alg = FedNL(prob["grad"], prob["hess"], comp, alpha=alpha, option=1,
+                    mu=1e-3)
+        (_, xs), u = _run(alg.run, x0, n, 150)
+        us += u
+        rounds_out[name] = rounds_to_accuracy(gaps(prob, xs), TARGET)
+    ok = {k: (v if v >= 0 else 10**9) for k, v in rounds_out.items()}
+    claim = ok["topk_a1"] <= min(ok.values())
+    report("fig6_update_rules", us,
+           "|".join(f"{k}={v}" for k, v in rounds_out.items())
+           + f"|claim_topk_a1_best={claim}")
+
+
+def fig7_bc(fast=False):
+    prob = problem("phishing")
+    d, n = prob["d"], prob["n"]
+    x0 = _near_x0(prob)
+    us = 0.0
+    bits = {}
+    for p in ([0.9, 0.6] if fast else [1.0, 0.9, 0.6, 0.5]):
+        k = max(1, int(p * d))
+        alg = FedNLBC(prob["grad"], prob["hess"], TopK(k=k), TopK(k=k),
+                      p=p, option=1, mu=1e-3)
+        (_, zs), u = _run(alg.run, x0, n, 600)
+        us += u
+        up, down = alg.bits_per_round(d)
+        bits[f"p={p}"] = bits_to_accuracy(gaps(prob, zs), up + down, TARGET)
+    rd = RandomDithering(s=int(d ** 0.5))
+    om = rd.omega_for((d,))
+    dore = Dore(prob["grad"], rd, rd, prob["consts"]["L"], n, om, om)
+    (_, xs), _ = _run(dore.run, x0, n, 3000 if not fast else 800)
+    up, down = dore.bits_per_round(d)
+    bits["DORE"] = bits_to_accuracy(gaps(prob, xs), up + down, TARGET)
+    best_bc = min(v for k, v in bits.items() if k != "DORE")
+    report("fig7_bc", us,
+           "|".join(f"{k}={v:.2e}" for k, v in bits.items())
+           + f"|claim_bc_beats_dore={best_bc < bits['DORE']}")
+
+
+def fig9_pp(fast=False):
+    prob = problem("a1a")
+    d, n = prob["d"], prob["n"]
+    x0 = _near_x0(prob)
+    us = 0.0
+    rounds_out = {}
+    taus = [max(1, int(0.2 * n)), max(1, int(0.5 * n)), n]
+    for tau in taus:
+        alg = FedNLPP(prob["grad"], prob["hess"], RankR(1), tau=tau)
+        (_, xs), u = _run(alg.run, x0, n, 200)
+        us += u
+        rounds_out[tau] = rounds_to_accuracy(gaps(prob, xs), TARGET)
+    mono = rounds_out[taus[0]] >= rounds_out[taus[-1]] >= 0
+
+    rd = RandomDithering(s=int(d ** 0.5))
+    om = rd.omega_for((d,))
+    art = Artemis(prob["grad"], rd, prob["consts"]["L"], n, om,
+                  tau=max(1, int(0.5 * n)))
+    (_, xs), _ = _run(art.run, x0, n, 3000 if not fast else 800)
+    pp = FedNLPP(prob["grad"], prob["hess"], RankR(1),
+                 tau=max(1, int(0.5 * n)))
+    (_, xs_pp), _ = _run(pp.run, x0, n, 200)
+    b_art = bits_to_accuracy(gaps(prob, xs), art.bits_per_round(d), TARGET)
+    b_pp = bits_to_accuracy(gaps(prob, xs_pp), pp.bits_per_round(d), TARGET)
+    report("fig9_pp", us,
+           "|".join(f"tau={k}:rounds={v}" for k, v in rounds_out.items())
+           + f"|mono_in_tau={mono}|bits_pp={b_pp:.2e}|bits_artemis={b_art:.2e}"
+           f"|claim_pp_beats_artemis={b_pp < b_art}")
+
+
+def fig14_heterogeneity(fast=False):
+    us = 0.0
+    out = {}
+    for tag, ab in [("iid", (0.0, 0.0)), ("mid", (0.5, 0.5)),
+                    ("high", (1.0, 1.0))]:
+        prob = problem(f"synthetic:{ab[0]}:{ab[1]}")
+        d, n = prob["d"], prob["n"]
+        x0 = _near_x0(prob)
+        alg = FedNL(prob["grad"], prob["hess"], RankR(1), option=2)
+        (_, xs), u = _run(alg.run, x0, n, 30)
+        us += u
+        b_f = bits_to_accuracy(gaps(prob, xs), alg.bits_per_round(d), TARGET,
+                               alg.init_bits(d))
+        (_, xs_gd), _ = _run(gd_run, x0, prob["grad"],
+                             1.0 / prob["consts"]["L"], 1500 if fast else 4000)
+        b_g = bits_to_accuracy(gaps(prob, xs_gd), d * FLOAT_BITS, TARGET)
+        out[tag] = (b_f, b_g)
+    # FedNL stays put; GD degrades (or at least never closes the gap)
+    adv = {k: v[1] / v[0] for k, v in out.items()}
+    claim = all(v[0] < v[1] for v in out.values())
+    report("fig14_heterogeneity", us,
+           "|".join(f"{k}:fednl={v[0]:.2e},gd={v[1]:.2e}"
+                    for k, v in out.items())
+           + f"|claim_fednl_wins_all_levels={claim}")
+
+
+def table2_rates(fast=False):
+    prob = problem("a1a")
+    d, n = prob["d"], prob["n"]
+    x0 = _near_x0(prob, scale=0.02)
+    checks = {}
+    alg = FedNL(prob["grad"], prob["hess"], RankR(1), option=1, mu=1e-3)
+    (_, xs), us = _run(alg.run, x0, n, 16)
+    r = np.asarray(jnp.sum((xs - prob["xstar"]) ** 2, axis=-1))
+    ks = [k for k in range(1, 12) if r[k] > 1e-14]
+    checks["fednl_linear_eq6"] = all(r[k] <= r[0] / 2**k * 8 for k in ks)
+    # superlinear: the rate factor is (1-A)^k with A = delta/4; use a
+    # high-delta compressor (Top-50% => A = 1/8) so the decay of the
+    # per-round ratio is measurable before machine precision.
+    alg_s = FedNL(prob["grad"], prob["hess"], TopK(k=d * d // 2), option=1,
+                  mu=1e-3)
+    x0_s = _near_x0(prob, scale=0.12, seed=5)  # inside the local basin
+    (_, xs_s), _ = _run(alg_s.run, x0_s, n, 16)
+    rs = np.asarray(jnp.sum((xs_s - prob["xstar"]) ** 2, axis=-1))
+    ratios = [rs[k + 1] / rs[k] for k in range(10) if rs[k] > 1e-24]
+    checks["fednl_superlinear"] = (len(ratios) >= 3
+                                   and ratios[-1] < ratios[0] * 0.5)
+
+    hstar = jnp.mean(prob["hess"](prob["xstar"]), axis=0)
+    (_, xs_ns), _ = _run(fixed_hessian_run, x0, hstar, prob["grad"], 6)
+    rr = np.linalg.norm(np.asarray(xs_ns) - np.asarray(prob["xstar"]), axis=-1)
+    c = prob["consts"]["L_star"] / (2 * 1e-3)
+    checks["ns_quadratic"] = all(
+        rr[k + 1] <= 20 * c * rr[k] ** 2 + 1e-14
+        for k in range(3) if rr[k] > 1e-9)
+
+    h0 = jnp.mean(prob["hess"](x0), axis=0)
+    (_, xs_n0), _ = _run(fixed_hessian_run, x0, h0, prob["grad"], 12)
+    r0 = np.sum((np.asarray(xs_n0) - np.asarray(prob["xstar"])) ** 2, -1)
+    checks["n0_linear"] = r0[10] <= r0[0] / 2**10 * 32
+    report("table2_rates", us,
+           "|".join(f"{k}={v}" for k, v in checks.items())
+           + f"|all={all(checks.values())}")
+
+
+def roofline(fast=False):
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "results_dryrun_1pod.jsonl")
+    if not os.path.exists(path):
+        report("roofline", 0.0, "missing results_dryrun_1pod.jsonl (run "
+               "python -m repro.launch.dryrun --all --out ...)")
+        return
+    rows = [json.loads(l) for l in open(path)]
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] == "skip"]
+    csv_rows = [(r["arch"], r["shape"], r["t_compute_s"], r["t_memory_s"],
+                 r["t_collective_s"], r["bottleneck"], r["useful_ratio"],
+                 r["peak_bytes_per_device"]) for r in ok]
+    write_csv("roofline", ["arch", "shape", "t_compute", "t_memory",
+                           "t_collective", "bottleneck", "useful_ratio",
+                           "peak_bytes_per_device"], csv_rows)
+    bcounts = {}
+    for r in ok:
+        bcounts[r["bottleneck"]] = bcounts.get(r["bottleneck"], 0) + 1
+    report("roofline", 0.0,
+           f"pairs_ok={len(ok)}|skips={len(skip)}|bottlenecks={bcounts}")
+
+
+BENCHES = [fig2_local, fig2_global, fig2_nl1, fig3_compression, fig4_options,
+           fig6_update_rules, fig7_bc, fig9_pp, fig14_heterogeneity,
+           table2_rates, roofline]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        if args.only and bench.__name__ != args.only:
+            continue
+        try:
+            bench(fast=args.fast)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            report(bench.__name__, 0.0, f"ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

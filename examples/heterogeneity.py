@@ -1,0 +1,44 @@
+"""Fig. 14 scenario: how statistical heterogeneity (synthetic(alpha, beta))
+affects FedNL vs gradient descent.
+
+    PYTHONPATH=src python examples/heterogeneity.py
+"""
+
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.core import FedNL, RankR
+from repro.core.baselines import gd_run
+from repro.core.newton import newton_run
+from repro.core.objectives import (batch_grad, batch_hess, global_value,
+                                   lipschitz_constants)
+from repro.data.synthetic import make_iid, make_synthetic
+
+for tag, maker in [
+    ("IID", lambda k: make_iid(k, n=30, m=200, d=100)),
+    ("synthetic(0,0)", lambda k: make_synthetic(k, 0.0, 0.0)),
+    ("synthetic(1,1)", lambda k: make_synthetic(k, 1.0, 1.0)),
+]:
+    data = maker(jax.random.PRNGKey(0))
+    grad_fn = lambda x: batch_grad(x, data)
+    hess_fn = lambda x: batch_hess(x, data)
+    val_fn = lambda x: global_value(x, data)
+    d = data.a.shape[-1]
+    xstar, _ = newton_run(jnp.zeros(d), grad_fn, hess_fn, 25)
+    fstar = float(val_fn(xstar))
+    x0 = xstar + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (d,))
+
+    alg = FedNL(grad_fn, hess_fn, RankR(1), option=2)
+    _, xs = alg.run(x0, data.a.shape[0], 15)
+    _, xs_gd = gd_run(x0, grad_fn, 1.0 / lipschitz_constants(data)["L"], 1500)
+
+    print(f"{tag:16s} FedNL gap@15 rounds: {float(val_fn(xs[-1])) - fstar:9.2e}"
+          f"   GD gap@1500 rounds: {float(val_fn(xs_gd[-1])) - fstar:9.2e}")
+print("\nFedNL is insensitive to heterogeneity; GD's tail is kappa-limited "
+      "regardless (the paper's Fig. 14 story).")

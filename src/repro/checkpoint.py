@@ -1,0 +1,45 @@
+"""Minimal dependency-free checkpointing: pytree -> .npz + structure.
+
+Arrays are gathered to host (fine at example scale; a production TPU
+deployment would swap in per-shard async writes — the API is the same).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    arr = np.asarray(leaf)
+    if arr.dtype.kind == "V":  # bfloat16 etc. — no native numpy dtype
+        arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
+    return arr
+
+
+def save(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = [_to_numpy(l) for l in leaves]
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{f"leaf_{i}": a for i, a in enumerate(arrays)})
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "num_leaves": len(leaves),
+                   "step": step}, f)
+
+
+def restore(path: str, like: Any) -> tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert meta["num_leaves"] == len(leaves_like), "structure mismatch"
+    leaves = [jnp.asarray(data[f"leaf_{i}"]).astype(l.dtype)
+              for i, l in enumerate(leaves_like)]
+    return jax.tree.unflatten(treedef, leaves), meta["step"]

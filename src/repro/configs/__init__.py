@@ -1,0 +1,35 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the exact published configuration;
+``get_config(name, smoke=True)`` the reduced same-family variant used by
+the CPU smoke tests. ``ARCHS`` lists every selectable ``--arch`` id.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "jamba-1.5-large-398b",
+    "starcoder2-15b",
+    "whisper-tiny",
+    "minicpm3-4b",
+    "starcoder2-3b",
+    "granite-moe-1b-a400m",
+    "grok-1-314b",
+    "xlstm-350m",
+    "llava-next-34b",
+    "qwen2-0.5b",
+    # the paper's own workload (logistic regression) is not an LM arch;
+    # it is exposed via configs.fednl_logreg helpers instead.
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(name: str, smoke: bool = False):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.CONFIG
+    return cfg.reduced() if smoke else cfg

@@ -1,0 +1,25 @@
+"""Granite 3.0 1B-A400M base [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+24 layers, d_model 1024, 16 heads (GQA kv=8), expert d_ff 512,
+vocab 49155; MoE with 32 experts, top-8.
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    attn_type="gqa",
+    rope=True,
+    mlp_type="swiglu",
+    moe=MoEConfig(num_experts=32, top_k=8),
+    norm="rmsnorm",
+    tie_embeddings=True,
+    source="[hf:ibm-granite/granite-3.0-1b-a400m-base]",
+)

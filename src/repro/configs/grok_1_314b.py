@@ -1,0 +1,24 @@
+"""Grok-1 (314B) [hf:xai-org/grok-1].
+
+64 layers, d_model 6144, 48 heads (GQA kv=8), expert d_ff 32768,
+vocab 131072; MoE with 8 experts, top-2.
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    kv_heads=8,
+    d_ff=32768,
+    vocab=131072,
+    attn_type="gqa",
+    rope=True,
+    mlp_type="gelu",
+    moe=MoEConfig(num_experts=8, top_k=2),
+    norm="rmsnorm",
+    source="[hf:xai-org/grok-1]",
+)

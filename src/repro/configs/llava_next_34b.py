@@ -1,0 +1,26 @@
+"""LLaVA-NeXT 34B backbone [hf:llava-hf/llava-v1.6-mistral-7b-hf, 34B variant].
+
+60 layers, d_model 7168, 56 heads (GQA kv=8), d_ff 20480, vocab 64000.
+The vision tower + projector are stubs by the brief's carve-out:
+input_specs provides precomputed patch embeddings. anyres tiling is
+represented by the patch count (base 576 + 4 tiles x 576 = 2880).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    attn_type="gqa",
+    rope=True,
+    mlp_type="swiglu",
+    vision_tokens=2880,            # anyres: 576 base + 4x576 tiles
+    norm="rmsnorm",
+    source="[hf:llava-hf/llava-v1.6-mistral-7b-hf]",
+)

@@ -1,0 +1,25 @@
+"""Qwen2-0.5B [arXiv:2407.10671].
+
+24 layers, d_model 896, 14 heads (GQA kv=2), d_ff 4864, vocab 151936;
+GQA with QKV bias, RoPE, tied embeddings.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    kv_heads=2,
+    d_ff=4864,
+    vocab=151936,
+    attn_type="gqa",
+    rope=True,
+    qkv_bias=True,
+    mlp_type="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    source="[arXiv:2407.10671]",
+)

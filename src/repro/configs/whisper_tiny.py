@@ -1,0 +1,27 @@
+"""Whisper tiny [arXiv:2212.04356].
+
+4 encoder + 4 decoder layers, d_model 384, 6 heads, d_ff 1536,
+vocab 51865. The mel+conv audio frontend is a stub by the brief's
+carve-out: input_specs provides (B, 1500, 384) frame embeddings.
+Sinusoidal positions (any length), full attention.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,
+    enc_layers=4,
+    enc_seq=1500,
+    d_model=384,
+    n_heads=6,
+    kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    attn_type="gqa",
+    rope=False,                    # sinusoidal positions instead
+    mlp_type="gelu",
+    norm="layernorm",
+    source="[arXiv:2212.04356]",
+)

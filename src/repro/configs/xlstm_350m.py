@@ -1,0 +1,23 @@
+"""xLSTM-350M [arXiv:2405.04517].
+
+24 layers, d_model 1024, 4 heads, vocab 50304, d_ff 0 (the xLSTM block
+carries its own projections); mLSTM : sLSTM = 7 : 1. Recurrent state
+decode — runs the long_500k shape with O(1) per-token state.
+"""
+
+from repro.models.config import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    rope=False,
+    xlstm=XLSTMConfig(slstm_every=8, chunk=256),
+    norm="rmsnorm",
+    source="[arXiv:2405.04517]",
+)

@@ -1,0 +1,33 @@
+"""FedNL core: the paper's algorithms, faithfully, in JAX."""
+
+from .compressors import (
+    BlockTopK,
+    Identity,
+    NaturalSparsification,
+    PowerSGD,
+    RandK,
+    RandomDithering,
+    RankR,
+    TopK,
+    Zero,
+    ab_constants,
+    alpha_for,
+)
+from .extensions import FedNLPPBC, StochasticFedNL
+from .fednl import FedNL, FedNLState
+from .fednl_bc import FedNLBC, FedNLBCState
+from .fednl_cr import FedNLCR
+from .fednl_ls import FedNLLS
+from .fednl_pp import FedNLPP, FedNLPPState
+from .linalg import frob_norm, project_psd, solve_cubic_subproblem
+from .newton import fixed_hessian_run, n0_ls_run, newton_run
+from .objectives import (
+    LogRegData,
+    batch_grad,
+    batch_hess,
+    batch_value,
+    global_grad,
+    global_hess,
+    global_value,
+    lipschitz_constants,
+)

@@ -1,0 +1,504 @@
+"""First-order and Newton-type baselines the paper compares against.
+
+GD, GD-LS          — vanilla gradient descent (theoretical 1/L step) and
+                     with backtracking line search.
+DIANA              — compressed gradient differences
+                     [Mishchenko et al. 2019]; theoretical stepsizes.
+ADIANA             — accelerated DIANA [Li et al. 2020b]; theoretical
+                     parameter template (strongly convex case).
+DINGO              — distributed Newton-type method for gradient-norm
+                     optimization [Crane & Roosta 2019]; three-case update
+                     + backtracking on ||grad||^2; bits counted both
+                     directions as the paper does.
+NL1                — Newton Learn for GLMs [Islamov et al. 2021]:
+                     learns per-data-point phi'' coefficients with Rand-K,
+                     reveals the touched data points (the privacy issue
+                     FedNL removes). Requires the GLM structure (eq. 2).
+DORE               — double-residual bidirectional compression
+                     [Liu et al. 2020] (vs FedNL-BC).
+Artemis            — bidirectional compression + partial participation
+                     [Philippenko & Dieuleveut 2021] (vs FedNL-PP).
+
+All are implemented over the same stacked per-silo oracle interface as
+FedNL and report analytic bits per round.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .compressors import Compressor, FLOAT_BITS, INDEX_BITS
+from .newton import backtracking
+
+
+# ---------------------------------------------------------------------------
+# Gradient descent
+# ---------------------------------------------------------------------------
+
+
+def gd_run(x0, grad_fn, lr: float, num_rounds: int):
+    def body(x, _):
+        xn = x - lr * jnp.mean(grad_fn(x), axis=0)
+        return xn, xn
+
+    final, xs = jax.lax.scan(body, x0, None, length=num_rounds)
+    return final, jnp.concatenate([x0[None], xs], axis=0)
+
+
+def gd_ls_run(x0, value_fn, grad_fn, num_rounds: int, c: float = 0.5,
+              gamma: float = 0.5, t0: float = 1.0):
+    def body(x, _):
+        g = jnp.mean(grad_fn(x), axis=0)
+        d_dir = -g
+        t = backtracking(value_fn, x, d_dir, g, c=c, gamma=gamma) * t0
+        xn = x + t * d_dir
+        return xn, xn
+
+    final, xs = jax.lax.scan(body, x0, None, length=num_rounds)
+    return final, jnp.concatenate([x0[None], xs], axis=0)
+
+
+def gd_bits_per_round(d: int) -> int:
+    return d * FLOAT_BITS
+
+
+# ---------------------------------------------------------------------------
+# DIANA
+# ---------------------------------------------------------------------------
+
+
+class DianaState(NamedTuple):
+    x: jax.Array
+    h_i: jax.Array  # (n, d) gradient shifts
+    key: jax.Array
+
+
+class Diana:
+    """x^{k+1} = x^k - gamma (h^k + mean_i C(grad_i - h_i)); h_i += alpha C(.).
+
+    Theoretical: alpha = 1/(1+omega); gamma = 1/(L (1 + 6 omega / n)).
+    """
+
+    def __init__(self, grad_fn, comp: Compressor, smooth_l: float, n: int,
+                 omega: float):
+        self.grad_fn = grad_fn
+        self.comp = comp
+        self.alpha = 1.0 / (1.0 + omega)
+        self.gamma = 1.0 / (smooth_l * (1.0 + 6.0 * omega / n))
+
+    def init(self, x0, n, seed: int = 0) -> DianaState:
+        d = x0.shape[0]
+        return DianaState(x0, jnp.zeros((n, d), x0.dtype), jax.random.PRNGKey(seed))
+
+    def step(self, state: DianaState) -> DianaState:
+        n = state.h_i.shape[0]
+        key, sub = jax.random.split(state.key)
+        keys = jax.random.split(sub, n)
+        grads = self.grad_fn(state.x)
+        delta = jax.vmap(self.comp)(grads - state.h_i, keys)
+        g_hat = jnp.mean(state.h_i + delta, axis=0)
+        return DianaState(
+            x=state.x - self.gamma * g_hat,
+            h_i=state.h_i + self.alpha * delta,
+            key=key,
+        )
+
+    def bits_per_round(self, d: int) -> int:
+        return self.comp.bits((d,))
+
+    def run(self, x0, n, num_rounds, seed: int = 0):
+        state = self.init(x0, n, seed=seed)
+
+        def body(state, _):
+            new = self.step(state)
+            return new, new.x
+
+        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
+        return final, jnp.concatenate([x0[None], xs], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# ADIANA
+# ---------------------------------------------------------------------------
+
+
+class AdianaState(NamedTuple):
+    x: jax.Array
+    y: jax.Array
+    z: jax.Array
+    w: jax.Array
+    h_i: jax.Array
+    key: jax.Array
+
+
+class Adiana:
+    """Accelerated DIANA (Li et al. 2020b, Alg. 2, strongly convex setting).
+
+    Per round: x = th1 z + th2 w + (1-th1-th2) y;
+    g = h + mean C(grad_i(x) - h_i); y+ = x - eta g;
+    z+ = (z + gamma mu x - gamma g) / (1 + gamma mu);
+    shifts learn the anchor: h_i += alpha C(grad_i(w) - h_i);
+    w+ = y with prob p (loopless anchor refresh).
+
+    Parameters follow the paper's Theorem (up to absolute constants):
+    alpha = 1/(1+om), p = alpha,
+    eta = min(1/(2 L (1 + 2 om/n)), n/(64 om L)) (om>0),
+    th2 = 1/2, th1 = min(1/4, sqrt(eta mu / p)),
+    gamma = eta / (2 (th1 + eta mu)), beta folded into the z-update.
+    """
+
+    def __init__(self, grad_fn, comp: Compressor, smooth_l: float, mu: float,
+                 n: int, omega: float):
+        self.grad_fn = grad_fn
+        self.comp = comp
+        om = max(omega, 1e-12)
+        self.alpha = 1.0 / (1.0 + om)
+        self.p = self.alpha
+        self.eta = min(1.0 / (2.0 * smooth_l * (1.0 + 2.0 * om / n)),
+                       n / (64.0 * om * smooth_l) if omega > 0 else jnp.inf)
+        self.th2 = 0.5
+        self.th1 = min(0.25, float(jnp.sqrt(self.eta * mu / self.p)))
+        self.gamma = self.eta / (2.0 * (self.th1 + self.eta * mu))
+        self.mu = mu
+
+    def init(self, x0, n, seed: int = 0) -> AdianaState:
+        d = x0.shape[0]
+        return AdianaState(x0, x0, x0, x0, jnp.zeros((n, d), x0.dtype),
+                           jax.random.PRNGKey(seed))
+
+    def step(self, state: AdianaState) -> AdianaState:
+        n = state.h_i.shape[0]
+        key, k1, k2, k3 = jax.random.split(state.key, 4)
+        x = self.th1 * state.z + self.th2 * state.w \
+            + (1.0 - self.th1 - self.th2) * state.y
+
+        keys = jax.random.split(k1, n)
+        grads_x = self.grad_fn(x)
+        delta = jax.vmap(self.comp)(grads_x - state.h_i, keys)
+        g = jnp.mean(state.h_i + delta, axis=0)
+
+        y_new = x - self.eta * g
+        z_new = (state.z + self.gamma * self.mu * x - self.gamma * g) \
+            / (1.0 + self.gamma * self.mu)
+
+        keys_w = jax.random.split(k2, n)
+        grads_w = self.grad_fn(state.w)
+        delta_w = jax.vmap(self.comp)(grads_w - state.h_i, keys_w)
+        h_new = state.h_i + self.alpha * delta_w
+
+        refresh = jax.random.bernoulli(k3, self.p)
+        w_new = jnp.where(refresh, state.y, state.w)
+
+        return AdianaState(x, y_new, z_new, w_new, h_new, key)
+
+    def bits_per_round(self, d: int) -> int:
+        return 2 * self.comp.bits((d,))  # two compressed vectors per round
+
+    def run(self, x0, n, num_rounds, seed: int = 0):
+        state = self.init(x0, n, seed=seed)
+
+        def body(state, _):
+            new = self.step(state)
+            return new, new.y
+
+        final, ys = jax.lax.scan(body, state, None, length=num_rounds)
+        return final, jnp.concatenate([x0[None], ys], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# DINGO
+# ---------------------------------------------------------------------------
+
+
+class Dingo:
+    """DINGO (Crane & Roosta 2019) with the paper's constants
+    theta = 1e-4, phi = 1e-6, rho = 1e-4 and backtracking from
+    {1, 2^-1, ..., 2^-10} on the gradient-norm objective.
+
+    Case 1: p = -mean_i H_i^+ g       if <p_avg, H g> >= theta ||g||^2
+    Case 2: per-i keep p_i = -H_i^+ g where local condition holds
+    Case 3: lagrangian correction via the phi-regularized system.
+    H_i^+ is implemented as a solve with the (SPD, lam-regularized)
+    local Hessian — exact for our strongly convex losses.
+    """
+
+    def __init__(self, value_fn, grad_fn, hess_fn, theta=1e-4, phi=1e-6,
+                 rho=1e-4):
+        self.value_fn = value_fn
+        self.grad_fn = grad_fn
+        self.hess_fn = hess_fn
+        self.theta = theta
+        self.phi = phi
+        self.rho = rho
+
+    def direction(self, x):
+        grads = self.grad_fn(x)               # (n, d)
+        hesses = self.hess_fn(x)              # (n, d, d)
+        g = jnp.mean(grads, axis=0)
+        d = x.shape[0]
+        eye = jnp.eye(d, dtype=x.dtype)
+
+        hg = jnp.mean(hesses, axis=0) @ g                       # \bar H g
+        gnorm2 = jnp.dot(g, g)
+        thresh = self.theta * gnorm2
+
+        p_pinv = jax.vmap(lambda h: -jnp.linalg.solve(h, g))(hesses)   # (n, d)
+        # phi-regularized least-squares direction: -(H^2 + phi^2 I)^{-1} H g
+        p_reg = jax.vmap(
+            lambda h: -jnp.linalg.solve(h @ h + self.phi**2 * eye, h @ g)
+        )(hesses)
+
+        p1 = jnp.mean(p_pinv, axis=0)
+        case1 = jnp.dot(p1, hg) <= -thresh
+
+        local_ok = jax.vmap(lambda p: jnp.dot(p, hg) <= -thresh)(p_pinv)
+        # case-3 lagrangian correction per device where local_ok fails
+        def correct(h, p):
+            ht_hg = jnp.linalg.solve(h @ h + self.phi**2 * eye, hg)
+            num = jnp.dot(p, hg) + thresh
+            den = jnp.maximum(jnp.dot(ht_hg, hg), 1e-30)
+            lam = jnp.maximum(num / den, 0.0)
+            return p - lam * ht_hg
+
+        p_fixed = jax.vmap(correct)(hesses, p_reg)
+        p_mixed = jnp.where(local_ok[:, None], p_pinv, p_fixed)
+        p23 = jnp.mean(p_mixed, axis=0)
+
+        return jnp.where(case1, p1, p23), g
+
+    def step(self, x):
+        p, g = self.direction(x)
+        # backtracking on 1/2||grad||^2 with slope rho ||p||... per DINGO:
+        # accept largest a in {1, .., 2^-10} with
+        #   ||grad(x + a p)||^2 <= ||g||^2 + 2 a rho <p, \bar H g>
+        hg = jnp.mean(self.hess_fn(x), axis=0) @ g
+        slope = 2.0 * self.rho * jnp.dot(p, hg)
+        gnorm2 = jnp.dot(g, g)
+
+        alphas = 2.0 ** -jnp.arange(11.0)
+
+        def probe(a):
+            gn = jnp.mean(self.grad_fn(x + a * p), axis=0)
+            return jnp.dot(gn, gn) <= gnorm2 + a * slope
+
+        ok = jax.vmap(probe)(alphas)
+        idx = jnp.argmax(ok)  # first acceptable (largest stepsize)
+        a = jnp.where(jnp.any(ok), alphas[idx], alphas[-1])
+        return x + a * p
+
+    @staticmethod
+    def bits_per_round(d: int) -> int:
+        """Both directions, per the paper's fair accounting: DINGO moves
+        several d-vectors per iteration (g aggregation, H g, the two
+        candidate directions, broadcasts of x and g)."""
+        return 6 * d * FLOAT_BITS
+
+    def run(self, x0, num_rounds):
+        def body(x, _):
+            xn = self.step(x)
+            return xn, xn
+
+        final, xs = jax.lax.scan(body, x0, None, length=num_rounds)
+        return final, jnp.concatenate([x0[None], xs], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# NL1 (Newton Learn, GLM-only predecessor)
+# ---------------------------------------------------------------------------
+
+
+class NL1State(NamedTuple):
+    x: jax.Array
+    gamma: jax.Array  # (n, m) learned phi'' coefficients
+    key: jax.Array
+
+
+class NL1:
+    """NL1 of Islamov et al. 2021 for eq. (2) GLMs.
+
+    Learns gamma_ij -> phi''_ij(a_ij^T x*) with Rand-K compression on the
+    per-silo coefficient vector; the server reconstructs
+    H^k = (1/nm) sum_ij gamma_ij a_ij a_ij^T + lam I (which requires the
+    touched data points a_ij — the privacy leak). Model update is the
+    regularized Newton step. eta = 1/(1+omega) with omega = m/K - 1.
+    """
+
+    def __init__(self, data, k: int = 1):
+        # data: objectives.LogRegData
+        self.data = data
+        self.k = k
+        m = data.a.shape[1]
+        self.eta = k / m  # = 1/(omega+1), omega = m/k - 1
+
+    def init(self, x0, seed: int = 0) -> NL1State:
+        from .objectives import silo_phi2
+
+        gamma0 = jax.vmap(lambda a, b: silo_phi2(x0, a, b))(self.data.a, self.data.b)
+        return NL1State(x0, gamma0, jax.random.PRNGKey(seed))
+
+    def step(self, state: NL1State) -> NL1State:
+        from .objectives import batch_grad, silo_phi2
+
+        n, m = state.gamma.shape
+        d = state.x.shape[0]
+        key, sub = jax.random.split(state.key)
+        keys = jax.random.split(sub, n)
+
+        phi2 = jax.vmap(lambda a, b: silo_phi2(state.x, a, b))(self.data.a, self.data.b)
+        delta = phi2 - state.gamma                          # (n, m)
+
+        def randk_vec(v, k_):
+            idx = jax.random.choice(k_, m, (self.k,), replace=False)
+            mask = jnp.zeros((m,), v.dtype).at[idx].set(1.0)
+            return v * mask * (m / self.k)
+
+        comp = jax.vmap(randk_vec)(delta, keys)
+        gamma_new = jnp.clip(state.gamma + self.eta * comp, 0.0, 0.25)
+
+        # server-side Hessian from learned coefficients (+ ridge)
+        def silo_h(gam, a):
+            return (a.T * gam) @ a / m
+
+        h = jnp.mean(jax.vmap(silo_h)(gamma_new, self.data.a), axis=0) \
+            + self.data.lam * jnp.eye(d, dtype=state.x.dtype)
+        g = jnp.mean(batch_grad(state.x, self.data), axis=0)
+        x_new = state.x - jnp.linalg.solve(h, g)
+        return NL1State(x_new, gamma_new, key)
+
+    def bits_per_round(self, d: int) -> int:
+        # gradient + K coefficients + K data points of dimension d
+        return d * FLOAT_BITS + self.k * (FLOAT_BITS + INDEX_BITS) \
+            + self.k * d * FLOAT_BITS
+
+    def run(self, x0, num_rounds, seed: int = 0):
+        state = self.init(x0, seed=seed)
+
+        def body(state, _):
+            new = self.step(state)
+            return new, new.x
+
+        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
+        return final, jnp.concatenate([x0[None], xs], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# DORE (bidirectional residual compression)
+# ---------------------------------------------------------------------------
+
+
+class DoreState(NamedTuple):
+    x_hat: jax.Array    # (d,) model replica tracked by everyone
+    x: jax.Array        # (d,) server model
+    h_i: jax.Array      # (n, d) gradient shifts
+    key: jax.Array
+
+
+class Dore:
+    """DORE [Liu et al. 2020]: DIANA-style uplink (gradient residual
+    compression with shifts) + compressed downlink model residual tracked
+    by replicas. Theoretical-flavored stepsizes as in DIANA; downlink
+    learning rate eta_m = 1/(1+omega_m)."""
+
+    def __init__(self, grad_fn, comp_up: Compressor, comp_down: Compressor,
+                 smooth_l: float, n: int, omega_up: float, omega_down: float):
+        self.grad_fn = grad_fn
+        self.comp_up = comp_up
+        self.comp_down = comp_down
+        self.alpha = 1.0 / (1.0 + omega_up)
+        self.gamma = 1.0 / (smooth_l * (1.0 + 6.0 * omega_up / n))
+        self.eta_m = 1.0 / (1.0 + omega_down)
+
+    def init(self, x0, n, seed: int = 0) -> DoreState:
+        d = x0.shape[0]
+        return DoreState(x0, x0, jnp.zeros((n, d), x0.dtype), jax.random.PRNGKey(seed))
+
+    def step(self, state: DoreState) -> DoreState:
+        n = state.h_i.shape[0]
+        key, k_up, k_down = jax.random.split(state.key, 3)
+        keys = jax.random.split(k_up, n)
+
+        grads = self.grad_fn(state.x_hat)              # gradients at the replica
+        delta = jax.vmap(self.comp_up)(grads - state.h_i, keys)
+        g_hat = jnp.mean(state.h_i + delta, axis=0)
+        h_new = state.h_i + self.alpha * delta
+
+        x_new = state.x - self.gamma * g_hat
+        q = self.comp_down(x_new - state.x_hat, k_down)
+        x_hat_new = state.x_hat + self.eta_m * q
+
+        return DoreState(x_hat_new, x_new, h_new, key)
+
+    def bits_per_round(self, d: int) -> tuple[int, int]:
+        return self.comp_up.bits((d,)), self.comp_down.bits((d,))
+
+    def run(self, x0, n, num_rounds, seed: int = 0):
+        state = self.init(x0, n, seed=seed)
+
+        def body(state, _):
+            new = self.step(state)
+            return new, new.x
+
+        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
+        return final, jnp.concatenate([x0[None], xs], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Artemis (bidirectional compression + partial participation)
+# ---------------------------------------------------------------------------
+
+
+class ArtemisState(NamedTuple):
+    x: jax.Array
+    h_i: jax.Array
+    key: jax.Array
+
+
+class Artemis:
+    """Artemis [Philippenko & Dieuleveut 2021] in the variant the paper
+    benchmarks: uplink random-sparsification of gradient differences with
+    memory, uncompressed downlink descent direction, tau active nodes."""
+
+    def __init__(self, grad_fn, comp_up: Compressor, smooth_l: float, n: int,
+                 omega: float, tau: int):
+        self.grad_fn = grad_fn
+        self.comp = comp_up
+        self.tau = tau
+        self.n = n
+        self.alpha = 1.0 / (1.0 + omega)
+        self.gamma = 1.0 / (smooth_l * (1.0 + 6.0 * omega * n / (tau * n)))
+
+    def init(self, x0, n, seed: int = 0) -> ArtemisState:
+        d = x0.shape[0]
+        return ArtemisState(x0, jnp.zeros((n, d), x0.dtype), jax.random.PRNGKey(seed))
+
+    def step(self, state: ArtemisState) -> ArtemisState:
+        n = state.h_i.shape[0]
+        key, k_sel, k_up = jax.random.split(state.key, 3)
+        perm = jax.random.permutation(k_sel, n)
+        active = jnp.zeros((n,), bool).at[perm[: self.tau]].set(True)
+
+        keys = jax.random.split(k_up, n)
+        grads = self.grad_fn(state.x)
+        delta = jax.vmap(self.comp)(grads - state.h_i, keys)
+        delta = jnp.where(active[:, None], delta, 0.0)
+
+        g_hat = jnp.mean(state.h_i, axis=0) + jnp.sum(delta, axis=0) / self.tau
+        h_new = state.h_i + self.alpha * delta
+
+        return ArtemisState(state.x - self.gamma * g_hat, h_new, key)
+
+    def bits_per_round(self, d: int) -> int:
+        return self.comp.bits((d,))  # per active device
+
+    def run(self, x0, n, num_rounds, seed: int = 0):
+        state = self.init(x0, n, seed=seed)
+
+        def body(state, _):
+            new = self.step(state)
+            return new, new.x
+
+        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
+        return final, jnp.concatenate([x0[None], xs], axis=0)

@@ -1,0 +1,86 @@
+"""FedNL-CR — Algorithm 4 (globalization via cubic regularization).
+
+Same device-side Hessian learning as FedNL. Server solves
+
+  h^k = argmin_h <grad, h> + 1/2 <(H^k + l^k I) h, h> + (L*/6) ||h||^3
+
+(the l^k correction makes H^k + l^k I an upper bound on the true Hessian,
+giving a global cubic upper model — paper Sec. 4.3/E) and steps
+x^{k+1} = x^k + h^k. H_i^0 = 0 is the paper's initialization for CR.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .compressors import Compressor, FLOAT_BITS
+from .fednl import FedNLState
+from .linalg import frob_norm, solve_cubic_subproblem
+
+
+class FedNLCR:
+    def __init__(
+        self,
+        grad_fn: Callable[[jax.Array], jax.Array],
+        hess_fn: Callable[[jax.Array], jax.Array],
+        compressor: Compressor,
+        l_star: float,
+        alpha: float = 1.0,
+    ):
+        self.grad_fn = grad_fn
+        self.hess_fn = hess_fn
+        self.comp = compressor
+        self.l_star = l_star
+        self.alpha = alpha
+
+    def init(self, x0, n, h0=None, seed: int = 0) -> FedNLState:
+        d = x0.shape[0]
+        if h0 is None:
+            h0 = jnp.zeros((n, d, d), x0.dtype)  # paper: H_i^0 = 0 for CR
+        return FedNLState(
+            x=x0, h_local=h0, h_global=jnp.mean(h0, axis=0),
+            key=jax.random.PRNGKey(seed), step=jnp.zeros((), jnp.int32),
+        )
+
+    def step(self, state: FedNLState) -> FedNLState:
+        n = state.h_local.shape[0]
+        key, sub = jax.random.split(state.key)
+        silo_keys = jax.random.split(sub, n)
+
+        grads = self.grad_fn(state.x)
+        hesses = self.hess_fn(state.x)
+        diff = hesses - state.h_local
+        s_i = jax.vmap(self.comp)(diff, silo_keys)
+        l_i = jax.vmap(frob_norm)(diff)
+
+        grad = jnp.mean(grads, axis=0)
+        l_mean = jnp.mean(l_i)
+        d = state.x.shape[0]
+        h_corr = state.h_global + l_mean * jnp.eye(d, dtype=state.x.dtype)
+
+        h_step = solve_cubic_subproblem(grad, h_corr, self.l_star)
+        x_new = state.x + h_step
+
+        return FedNLState(
+            x=x_new,
+            h_local=state.h_local + self.alpha * s_i,
+            h_global=state.h_global + self.alpha * jnp.mean(s_i, axis=0),
+            key=key,
+            step=state.step + 1,
+        )
+
+    def bits_per_round(self, d: int) -> int:
+        return d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
+
+    def run(self, x0, n, num_rounds, h0=None, seed: int = 0):
+        state = self.init(x0, n, h0=h0, seed=seed)
+
+        def body(state, _):
+            new = self.step(state)
+            return new, new.x
+
+        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
+        return final, jnp.concatenate([x0[None], xs], axis=0)

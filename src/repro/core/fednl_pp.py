@@ -1,0 +1,129 @@
+"""FedNL-PP — Algorithm 2 (partial participation).
+
+Server state: g^k = mean_i g_i^k, H^k = mean_i H_i^k, l^k = mean_i l_i^k.
+Every round:
+
+  x^{k+1} = (H^k + l^k I)^{-1} g^k                      # line 4
+  sample S^k subset of [n], |S^k| = tau, uniformly       # line 5
+  participating i:  w_i <- x^{k+1}
+                    H_i <- H_i + alpha C(hess_i(w_i) - H_i)
+                    l_i <- ||H_i - hess_i(w_i)||_F
+                    g_i <- (H_i + l_i I) w_i - grad_i(w_i)   # Hessian-corrected
+  non-participating: frozen.
+  server keeps g, H, l consistent via the communicated diffs (lines 18-20).
+
+The Hessian-corrected local gradient g_i = (H_i + l_i I) w_i - grad_i(w_i)
+is the paper's key trick: it turns the server aggregate into an implicit
+Newton-type step on *stale* local models. Note the sign conventions:
+x^{k+1} = (H + lI)^{-1} g with g as defined — the server step is line 4.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .compressors import Compressor, FLOAT_BITS
+from .linalg import frob_norm, solve_newton_system
+
+
+class FedNLPPState(NamedTuple):
+    w: jax.Array         # (n, d) stale local models
+    h_local: jax.Array   # (n, d, d)
+    l_local: jax.Array   # (n,)
+    g_local: jax.Array   # (n, d) Hessian-corrected local gradients
+    h_global: jax.Array  # (d, d)
+    l_global: jax.Array  # ()
+    g_global: jax.Array  # (d,)
+    x: jax.Array         # (d,) latest global model (for monitoring)
+    key: jax.Array
+    step: jax.Array
+
+
+class FedNLPP:
+    def __init__(
+        self,
+        grad_fn_at: Callable[[jax.Array], jax.Array],   # x -> (n, d) per-silo grads at x
+        hess_fn_at: Callable[[jax.Array], jax.Array],   # x -> (n, d, d)
+        compressor: Compressor,
+        tau: int,
+        alpha: float = 1.0,
+    ):
+        self.grad_fn = grad_fn_at
+        self.hess_fn = hess_fn_at
+        self.comp = compressor
+        self.tau = tau
+        self.alpha = alpha
+
+    def init(self, x0: jax.Array, n: int, seed: int = 0) -> FedNLPPState:
+        d = x0.shape[0]
+        w = jnp.tile(x0[None], (n, 1))
+        h0 = self.hess_fn(x0)                                  # H_i^0 = hess_i(x0)
+        hess_w = h0
+        l0 = jax.vmap(frob_norm)(h0 - hess_w)                  # zeros
+        grads = self.grad_fn(x0)
+        g0 = jax.vmap(lambda h, l, wi, gi: (h + l * jnp.eye(d, dtype=x0.dtype)) @ wi - gi)(
+            h0, l0, w, grads)
+        return FedNLPPState(
+            w=w, h_local=h0, l_local=l0, g_local=g0,
+            h_global=jnp.mean(h0, axis=0), l_global=jnp.mean(l0),
+            g_global=jnp.mean(g0, axis=0), x=x0,
+            key=jax.random.PRNGKey(seed), step=jnp.zeros((), jnp.int32),
+        )
+
+    def step(self, state: FedNLPPState) -> FedNLPPState:
+        n, d = state.w.shape
+        key, k_sel, k_comp = jax.random.split(state.key, 3)
+
+        # line 4: global model from server aggregates
+        h_eff = state.h_global + state.l_global * jnp.eye(d, dtype=state.x.dtype)
+        x_new = solve_newton_system(h_eff, state.g_global)
+
+        # line 5: uniform subset of size tau
+        perm = jax.random.permutation(k_sel, n)
+        active = jnp.zeros((n,), bool).at[perm[: self.tau]].set(True)
+
+        # device updates (computed for all, applied where active)
+        silo_keys = jax.random.split(k_comp, n)
+        hess_new = self.hess_fn(x_new)                         # hess_i(w_i^{k+1}=x^{k+1})
+        grads_new = self.grad_fn(x_new)
+
+        diff = hess_new - state.h_local
+        s_i = jax.vmap(self.comp)(diff, silo_keys)
+        h_upd = state.h_local + self.alpha * s_i
+        l_upd = jax.vmap(frob_norm)(h_upd - hess_new)
+        eye = jnp.eye(d, dtype=state.x.dtype)
+        g_upd = jax.vmap(lambda h, l, gi: (h + l * eye) @ x_new - gi)(h_upd, l_upd, grads_new)
+
+        mask = active[:, None]
+        maskm = active[:, None, None]
+        w_next = jnp.where(mask, x_new[None], state.w)
+        h_next = jnp.where(maskm, h_upd, state.h_local)
+        l_next = jnp.where(active, l_upd, state.l_local)
+        g_next = jnp.where(mask, g_upd, state.g_local)
+
+        # server lines 18-20: aggregate diffs from active clients
+        h_global = state.h_global + jnp.mean(
+            jnp.where(maskm, self.alpha * s_i, 0.0), axis=0)
+        l_global = state.l_global + jnp.mean(jnp.where(active, l_upd - state.l_local, 0.0))
+        g_global = state.g_global + jnp.mean(
+            jnp.where(mask, g_upd - state.g_local, 0.0), axis=0)
+
+        return FedNLPPState(w_next, h_next, l_next, g_next,
+                            h_global, l_global, g_global, x_new, key, state.step + 1)
+
+    def bits_per_round(self, d: int) -> int:
+        """Per *active* device: S_i + (l diff) + (g diff)."""
+        return self.comp.bits((d, d)) + FLOAT_BITS + d * FLOAT_BITS
+
+    def run(self, x0, n, num_rounds, seed: int = 0):
+        state = self.init(x0, n, seed=seed)
+
+        def body(state, _):
+            new = self.step(state)
+            return new, new.x
+
+        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
+        return final, jnp.concatenate([x0[None], xs], axis=0)

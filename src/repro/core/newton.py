@@ -1,0 +1,90 @@
+"""Reference Newton-type methods: N, NS, N0, N0-LS (paper Sec. 3.5, App. G).
+
+All are special cases of FedNL's template:
+
+  Newton (N):        C = I, alpha = 1, H_i^0 = 0          (exact Hessians)
+  Newton-Star (NS):  C = 0, alpha = 0, H_i^0 = hess_i(x*) (oracle)
+  Newton-Zero (N0):  C = 0, alpha = 0, H_i^0 = hess_i(x0)
+  N0-LS:             N0 direction + backtracking line search
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .linalg import project_psd, solve_newton_system
+
+
+class SimpleState(NamedTuple):
+    x: jax.Array
+    h: jax.Array  # fixed or current (d, d) Hessian estimate
+
+
+def newton_step(x, grad_fn, hess_fn):
+    """Classical Newton on the averaged problem."""
+    g = jnp.mean(grad_fn(x), axis=0)
+    h = jnp.mean(hess_fn(x), axis=0)
+    return x - solve_newton_system(h, g)
+
+
+def newton_run(x0, grad_fn, hess_fn, num_rounds):
+    def body(x, _):
+        xn = newton_step(x, grad_fn, hess_fn)
+        return xn, xn
+
+    final, xs = jax.lax.scan(body, x0, None, length=num_rounds)
+    return final, jnp.concatenate([x0[None], xs], axis=0)
+
+
+def fixed_hessian_run(x0, h_fixed, grad_fn, num_rounds, mu: float = 0.0):
+    """NS (h_fixed = hess(x*)) and N0 (h_fixed = hess(x0)); eq. (9)/(55)."""
+    h_eff = project_psd(h_fixed, mu) if mu > 0 else h_fixed
+
+    def body(x, _):
+        g = jnp.mean(grad_fn(x), axis=0)
+        xn = x - solve_newton_system(h_eff, g)
+        return xn, xn
+
+    final, xs = jax.lax.scan(body, x0, None, length=num_rounds)
+    return final, jnp.concatenate([x0[None], xs], axis=0)
+
+
+def backtracking(value_fn, x, d_dir, g, c: float = 0.5, gamma: float = 0.5,
+                 max_steps: int = 30):
+    """Smallest integer s >= 0 with
+    f(x + gamma^s d) <= f(x) + c gamma^s <g, d>  (paper line 12, Alg 3).
+    Returns the accepted stepsize gamma^s."""
+    f0 = value_fn(x)
+    slope = jnp.dot(g, d_dir)
+
+    def cond(carry):
+        s, t, done = carry
+        return jnp.logical_and(~done, s < max_steps)
+
+    def body(carry):
+        s, t, _ = carry
+        ok = value_fn(x + t * d_dir) <= f0 + c * t * slope
+        t_next = jnp.where(ok, t, t * gamma)
+        return s + 1, t_next, ok
+
+    _, t, _ = jax.lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), jnp.ones_like(f0), jnp.zeros((), bool)))
+    return t
+
+
+def n0_ls_run(x0, h_fixed, value_fn, grad_fn, num_rounds, mu: float = 0.0,
+              c: float = 0.5, gamma: float = 0.5):
+    """Newton-Zero with backtracking line search (N0-LS)."""
+    h_eff = project_psd(h_fixed, mu) if mu > 0 else h_fixed
+
+    def body(x, _):
+        g = jnp.mean(grad_fn(x), axis=0)
+        d_dir = -solve_newton_system(h_eff, g)
+        t = backtracking(value_fn, x, d_dir, g, c=c, gamma=gamma)
+        xn = x + t * d_dir
+        return xn, xn
+
+    final, xs = jax.lax.scan(body, x0, None, length=num_rounds)
+    return final, jnp.concatenate([x0[None], xs], axis=0)

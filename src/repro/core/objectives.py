@@ -1,0 +1,143 @@
+"""Problem oracles for the FedNL experiments.
+
+The paper's empirical problem (eq. (10)):
+
+    min_x (1/n) sum_i f_i(x) + (lambda/2) ||x||^2,
+    f_i(x) = (1/m) sum_j log(1 + exp(-b_ij a_ij^T x))
+
+We expose per-silo oracles on stacked data tensors of shape
+(n_silos, m, d) / (n_silos, m), each vmap/shard_map friendly:
+
+    value_i, grad_i, hess_i  — per silo (take (m,d),(m,) slabs)
+    batch_*                  — vmapped over the silo axis
+    global_*                 — average over silos
+
+The regularizer is split evenly into every f_i so that
+f = (1/n) sum f_i matches eq. (10) exactly.
+
+Also: quadratic oracles (for NS/N0 sanity) and GLM scaffolding used by
+the NL1 baseline, which needs phi''_ij per data point (eq. (2)).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LogRegData(NamedTuple):
+    a: jax.Array  # (n, m, d) features
+    b: jax.Array  # (n, m)    labels in {-1, +1}
+    lam: float    # l2 regularization
+
+
+# -- numerically stable pieces ------------------------------------------------
+
+
+def _log1pexp(t: jax.Array) -> jax.Array:
+    """log(1 + exp(t)) without overflow."""
+    return jnp.logaddexp(0.0, t)
+
+
+def _sigmoid(t: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(t)
+
+
+# -- per-silo oracles ---------------------------------------------------------
+
+
+def silo_value(x: jax.Array, a: jax.Array, b: jax.Array, lam: float) -> jax.Array:
+    margins = -b * (a @ x)                     # (m,)
+    return jnp.mean(_log1pexp(margins)) + 0.5 * lam * jnp.dot(x, x)
+
+
+def silo_grad(x: jax.Array, a: jax.Array, b: jax.Array, lam: float) -> jax.Array:
+    margins = -b * (a @ x)
+    coef = _sigmoid(margins) * (-b)            # d/dz of log1pexp(-b z)
+    return a.T @ coef / a.shape[0] + lam * x
+
+
+def silo_hess(x: jax.Array, a: jax.Array, b: jax.Array, lam: float) -> jax.Array:
+    margins = -b * (a @ x)
+    s = _sigmoid(margins)
+    w = s * (1.0 - s)                          # (m,) phi'' weights; b^2 = 1
+    d = x.shape[0]
+    return (a.T * w) @ a / a.shape[0] + lam * jnp.eye(d, dtype=x.dtype)
+
+
+def silo_phi2(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """phi''_ij(a_ij^T x) for the GLM structure (NL1 baseline)."""
+    margins = -b * (a @ x)
+    s = _sigmoid(margins)
+    return s * (1.0 - s)
+
+
+# -- stacked (all-silo) oracles ----------------------------------------------
+
+
+def batch_value(x: jax.Array, data: LogRegData) -> jax.Array:
+    return jax.vmap(lambda a, b: silo_value(x, a, b, data.lam))(data.a, data.b)
+
+
+def batch_grad(x: jax.Array, data: LogRegData) -> jax.Array:
+    return jax.vmap(lambda a, b: silo_grad(x, a, b, data.lam))(data.a, data.b)
+
+
+def batch_hess(x: jax.Array, data: LogRegData) -> jax.Array:
+    return jax.vmap(lambda a, b: silo_hess(x, a, b, data.lam))(data.a, data.b)
+
+
+def global_value(x: jax.Array, data: LogRegData) -> jax.Array:
+    return jnp.mean(batch_value(x, data))
+
+
+def global_grad(x: jax.Array, data: LogRegData) -> jax.Array:
+    return jnp.mean(batch_grad(x, data), axis=0)
+
+
+def global_hess(x: jax.Array, data: LogRegData) -> jax.Array:
+    return jnp.mean(batch_hess(x, data), axis=0)
+
+
+# -- constants of Assumption 3.1 ----------------------------------------------
+
+
+def lipschitz_constants(data: LogRegData) -> dict:
+    """Upper bounds on (mu, L, L_*, L_F, L_inf) for eq. (10).
+
+    For logistic loss: |phi'''| <= 1/(6 sqrt(3)) <= 0.1; a crude and safe
+    bound uses max_j ||a_ij||^3 / (10) per silo for the Hessian Lipschitz
+    constants (spectral <= Frobenius), and L = max eig of (1/4m) A^T A + lam.
+    mu >= lam always (each f_i is lam-strongly convex).
+    """
+    a = data.a
+    norms = jnp.linalg.norm(a, axis=-1)                    # (n, m)
+    c3 = 0.09623  # max |phi'''| = 1/(6 sqrt 3)
+    l_star = float(jnp.max(jnp.mean(norms**3, axis=1)) * c3)
+    l_f = l_star  # Frobenius-Lipschitz bound via the same rank-1 structure
+    l_inf = float(jnp.max(jnp.mean(norms * jnp.max(jnp.abs(a), axis=-1) ** 2, axis=1)) * c3)
+    smooth = float(jnp.max(jnp.mean(norms**2, axis=1)) / 4.0 + data.lam)
+    return dict(mu=data.lam, L=smooth, L_star=l_star, L_F=l_f, L_inf=l_inf)
+
+
+# -- quadratic oracles (for NS / N0 / unit tests) ------------------------------
+
+
+class QuadData(NamedTuple):
+    q: jax.Array   # (n, d, d) per-silo PSD matrices
+    c: jax.Array   # (n, d)    per-silo linear terms
+
+
+def quad_value(x: jax.Array, data: QuadData) -> jax.Array:
+    vals = jax.vmap(lambda q, c: 0.5 * x @ q @ x - c @ x)(data.q, data.c)
+    return jnp.mean(vals)
+
+
+def quad_grad(x: jax.Array, data: QuadData) -> jax.Array:
+    return jnp.mean(jax.vmap(lambda q, c: q @ x - c)(data.q, data.c), axis=0)
+
+
+def quad_hess_batch(x: jax.Array, data: QuadData) -> jax.Array:
+    return data.q

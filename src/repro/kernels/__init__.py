@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for FedNL's compute hot spots.
+
+  block_topk      — block-local Top-K contractive compressor (Def 3.3 with
+                    delta = k/b^2); the TPU-native replacement for global
+                    Top-K (A.3.3).
+  hess_update     — fused H += alpha*S with the ||D - H||_F compression-
+                    error reduction (l_i^k) in the same HBM pass.
+  tiled_matmul    — MXU-tiled matmul used by the PowerSGD/Rank-R power
+                    iteration (A.3.2's TPU form).
+  flash_attention — causal online-softmax attention (serving fast path).
+
+Every kernel ships an ops.py (jit'd wrapper with interpret fallback on
+CPU) and a ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,2 @@
+from .ops import block_topk
+from .ref import block_topk_ref

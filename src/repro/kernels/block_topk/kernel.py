@@ -1,0 +1,61 @@
+"""Block-local Top-K compressor kernel.
+
+Grid: one program per (bm, bn) tile held in VMEM. Per tile, keep the k
+largest-magnitude entries and zero the rest. Instead of a sort (hostile
+to the VPU), the k-th magnitude is found by ~32 rounds of bisection on
+[0, max|x|] — each round is a full-tile compare+popcount, all
+vector-friendly. Entries with |x| >= threshold survive.
+
+The resulting operator is contractive with delta = k / (bm*bn) per
+Definition 3.3 (contraction holds per tile; Frobenius norm is separable
+across tiles) — see DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_tile_kernel(x_ref, o_ref, *, k: int, iters: int = 32):
+    x = x_ref[...]
+    ax = jnp.abs(x).astype(jnp.float32)
+    numel = ax.size
+
+    if k >= numel:
+        o_ref[...] = x
+        return
+
+    hi = jnp.max(ax)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((ax >= mid).astype(jnp.int32))
+        # too many survivors -> raise threshold
+        lo = jnp.where(cnt > k, mid, lo)
+        hi = jnp.where(cnt > k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    thr = hi  # count(ax >= hi) <= k <= count(ax >= lo)
+    o_ref[...] = jnp.where(ax >= thr, x, jnp.zeros_like(x))
+
+
+def block_topk_kernel(x: jax.Array, k: int, block: int = 128,
+                      interpret: bool = False) -> jax.Array:
+    """x: (M, N) with M, N multiples of ``block`` (ops.py pads)."""
+    m, n = x.shape
+    grid = (m // block, n // block)
+    return pl.pallas_call(
+        functools.partial(_topk_tile_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,23 @@
+"""Jit'd wrapper: pads to block multiples, dispatches to the Pallas
+kernel (interpret=True on CPU so the kernel body itself is what runs)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import block_topk_kernel
+
+
+@partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def block_topk(x: jax.Array, k: int, block: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = x.shape
+    pm, pn = (-m) % block, (-n) % block
+    xp = jnp.pad(x, ((0, pm), (0, pn))) if (pm or pn) else x
+    out = block_topk_kernel(xp, k=k, block=block, interpret=interpret)
+    return out[:m, :n] if (pm or pn) else out

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: exact per-block Top-K via jax.lax.top_k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_topk_ref(x: jax.Array, k: int, block: int = 128) -> jax.Array:
+    m, n = x.shape
+    assert m % block == 0 and n % block == 0
+    nb0, nb1 = m // block, n // block
+    tiles = x.reshape(nb0, block, nb1, block).transpose(0, 2, 1, 3) \
+        .reshape(nb0 * nb1, block * block)
+    kk = min(k, block * block)
+    _, idx = jax.lax.top_k(jnp.abs(tiles), kk)
+    vals = jnp.take_along_axis(tiles, idx, axis=1)
+    out = jnp.zeros_like(tiles)
+    out = jax.vmap(lambda o, i, v: o.at[i].set(v))(out, idx, vals)
+    return out.reshape(nb0, nb1, block, block).transpose(0, 2, 1, 3) \
+        .reshape(m, n)

@@ -1,0 +1,29 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, bq: int = 128,
+                    bk: int = 128, interpret: bool | None = None) -> jax.Array:
+    """Causal attention over (B, T, H, hd) (GQA groups pre-expanded by the
+    caller). Pads T to the block size; padded keys are masked by causality
+    (they sit at positions > every real query)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, t, h, hd = q.shape
+    pad = (-t) % max(bq, bk)
+    if pad:
+        zeros = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zeros(q), zeros(k), zeros(v)
+    tp = t + pad
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, tp, hd)
+    out = flash_attention_kernel(fold(q), fold(k), fold(v), bq=bq, bk=bk,
+                                 interpret=interpret)
+    out = out.reshape(b, h, tp, hd).transpose(0, 2, 1, 3)
+    return out[:, :t]

@@ -1,0 +1,2 @@
+from .ops import hess_update
+from .ref import hess_update_ref

@@ -1,0 +1,48 @@
+"""Fused FedNL device-side Hessian bookkeeping (Algorithm 1 lines 5-6).
+
+Per round each device must produce, from the same d x d tiles:
+
+    l_i^k       = || H_i^k - D^k ||_F          (D = local Hessian at x^k)
+    H_i^{k+1}   = H_i^k + alpha * S^k          (S = compressed diff)
+
+Doing the norm and the update in separate passes streams H twice from
+HBM; this kernel fuses both into one pass: per-(bm,bn) tile it writes the
+updated tile and accumulates the squared-error partial into a per-tile
+scratch cell (summed by the ops wrapper — a (grid,) reduction is cheap).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hess_update_kernel(h_ref, d_ref, s_ref, o_ref, err_ref, *, alpha: float):
+    h = h_ref[...]
+    d = d_ref[...]
+    s = s_ref[...]
+    diff = (h - d).astype(jnp.float32)
+    err_ref[0, 0] = jnp.sum(diff * diff)
+    o_ref[...] = h + alpha * s
+
+
+def hess_update_kernel(h: jax.Array, d: jax.Array, s: jax.Array, alpha: float,
+                       block: int = 128, interpret: bool = False):
+    m, n = h.shape
+    grid = (m // block, n // block)
+    tile = pl.BlockSpec((block, block), lambda i, j: (i, j))
+    out, err = pl.pallas_call(
+        functools.partial(_hess_update_kernel, alpha=alpha),
+        grid=grid,
+        in_specs=[tile, tile, tile],
+        out_specs=[tile, pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_shape=[
+            jax.ShapeDtypeStruct(h.shape, h.dtype),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, d, s)
+    return out, err

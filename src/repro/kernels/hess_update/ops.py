@@ -1,0 +1,28 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import hess_update_kernel
+
+
+@partial(jax.jit, static_argnames=("alpha", "block", "interpret"))
+def hess_update(h: jax.Array, d: jax.Array, s: jax.Array, alpha: float,
+                block: int = 128, interpret: bool | None = None):
+    """Returns (H + alpha*S, ||H - D||_F). Pads to block multiples."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = h.shape
+    pm, pn = (-m) % block, (-n) % block
+    if pm or pn:
+        pad = lambda x: jnp.pad(x, ((0, pm), (0, pn)))
+        h_p, d_p, s_p = pad(h), pad(d), pad(s)
+    else:
+        h_p, d_p, s_p = h, d, s
+    out, err = hess_update_kernel(h_p, d_p, s_p, alpha, block=block,
+                                  interpret=interpret)
+    if pm or pn:
+        out = out[:m, :n]
+    return out, jnp.sqrt(jnp.sum(err))

@@ -1,0 +1,12 @@
+"""Oracle: unfused two-pass version."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hess_update_ref(h: jax.Array, d: jax.Array, s: jax.Array, alpha: float):
+    diff = (h - d).astype(jnp.float32)
+    l = jnp.sqrt(jnp.sum(diff * diff))
+    return h + alpha * s, l

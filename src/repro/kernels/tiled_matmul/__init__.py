@@ -1,0 +1,2 @@
+from .ops import tiled_matmul, powersgd_rank_r
+from .ref import tiled_matmul_ref, powersgd_rank_r_ref

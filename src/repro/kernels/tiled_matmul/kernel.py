@@ -1,0 +1,50 @@
+"""MXU-tiled matmul — the compute core of the PowerSGD / Rank-R power
+iteration (M @ Q and M^T @ P are the hot loops of the paper's preferred
+compressor at scale).
+
+Grid (M/bm, N/bn, K/bk); the K axis is the innermost (sequential) grid
+dimension, accumulating into the output tile in fp32 — MXU dims aligned
+to 128 by the ops wrapper's padding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # The output tile is revisited across the (sequential, innermost) K
+    # grid axis and accumulated in fp32 (the out_shape dtype).
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def tiled_matmul_kernel(a: jax.Array, b: jax.Array, bm: int = 128,
+                        bn: int = 128, bk: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,43 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import tiled_matmul_kernel
+
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, (m, n)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def tiled_matmul(a: jax.Array, b: jax.Array, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    a_p, (m, _) = _pad2(a, bm, bk)
+    b_p, (_, n) = _pad2(b, bk, bn)
+    out = tiled_matmul_kernel(a_p, b_p, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+    return out[:m, :n].astype(a.dtype)
+
+
+def powersgd_rank_r(m: jax.Array, r: int, iters: int = 2, seed: int = 0,
+                    interpret: bool | None = None) -> jax.Array:
+    """Rank-R compression by subspace iteration with the Pallas matmul as
+    the compute core (QR stays in jnp — it is O(d r^2), not the hot loop)."""
+    d1 = m.shape[1]
+    q = jax.random.normal(jax.random.PRNGKey(seed), (d1, r), jnp.float32)
+    q, _ = jnp.linalg.qr(q)
+    m32 = m.astype(jnp.float32)
+    for _ in range(iters):
+        p, _ = jnp.linalg.qr(tiled_matmul(m32, q, interpret=interpret))
+        q, _ = jnp.linalg.qr(tiled_matmul(m32.T, p, interpret=interpret))
+    p = tiled_matmul(m32, q, interpret=interpret)
+    return tiled_matmul(p, q.T, interpret=interpret).astype(m.dtype)

@@ -1,0 +1,24 @@
+"""Oracles: plain jnp matmul and SVD-free rank-R power iteration."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tiled_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def powersgd_rank_r_ref(m: jax.Array, r: int, iters: int = 2,
+                        seed: int = 0) -> jax.Array:
+    """Reference subspace iteration using jnp matmuls + QR."""
+    d1 = m.shape[1]
+    q = jax.random.normal(jax.random.PRNGKey(seed), (d1, r), jnp.float32)
+    q, _ = jnp.linalg.qr(q)
+    m32 = m.astype(jnp.float32)
+    for _ in range(iters):
+        p, _ = jnp.linalg.qr(m32 @ q)
+        q, _ = jnp.linalg.qr(m32.T @ p)
+    p = m32 @ q
+    return (p @ q.T).astype(m.dtype)

@@ -1,0 +1,171 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+  compute term    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+  memory term     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective term = collective_bytes / (chips * 50e9 B/s per ICI link)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(); collective bytes
+are parsed from the (post-SPMD) HLO text by summing the result-shape
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops. MODEL_FLOPS uses 6·N·D (dense) / 6·N_active·D
+(MoE) for training and 2·N(+_active)·D for single forward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind (start/done pairs counted
+    once via the '-start' form; plain forms counted directly)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(\([^)]*\)|[a-z0-9_]+\[[0-9,]*\][^ ]*)\s+([a-z0-9-]+)", rhs)
+        if not m:
+            continue
+        shapes_txt, op = m.group(1), m.group(2)
+        base = op.replace("-start", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            out[base] += _shape_bytes(shapes_txt)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All HLO-derived quantities are PER-DEVICE (cost_analysis reports the
+    local SPMD executable — verified against a hand-sharded matmul);
+    model_flops is the GLOBAL analytic count."""
+
+    flops: float
+    bytes_hbm: float
+    coll: dict[str, int]
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def coll_bytes(self) -> int:
+        return sum(self.coll.values())
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS, both normalized per device."""
+        return (self.model_flops / self.chips) / self.flops if self.flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes_hbm,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            **{f"bytes_{k}": v for k, v in self.coll.items()},
+        }
+
+
+def count_params(cfg, active_only: bool = False) -> float:
+    """Analytic parameter count (embeddings included once)."""
+    d, ff, v, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    hd = cfg.hd
+    total = v * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            qd = m.qk_nope_dim + m.qk_rope_dim
+            return (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qd
+                    + d * m.kv_lora_rank + d * m.qk_rope_dim
+                    + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                    + cfg.n_heads * m.v_head_dim * d)
+        return d * cfg.n_heads * hd + 2 * d * cfg.kv_heads * hd \
+            + cfg.n_heads * hd * d
+
+    def mlp_params(experts: int = 1, topk: int = 1, active: bool = False):
+        per = (3 if cfg.mlp_type == "swiglu" else 2) * d * ff
+        e = (topk if active else experts)
+        return per * e
+
+    from repro.models.transformer import layer_kinds
+
+    for i, (mixer, ffn) in enumerate(layer_kinds(cfg)):
+        if mixer in ("attn", "mla"):
+            total += attn_params()
+        elif mixer == "mamba":
+            di = cfg.mamba.expand * d
+            total += d * 2 * di + cfg.mamba.d_conv * di \
+                + di * 2 * cfg.mamba.d_state + di + di * cfg.mamba.d_state + di * d
+        elif mixer == "mlstm":
+            total += 5 * d * d + d * 2 * cfg.n_heads
+        elif mixer == "slstm":
+            total += 9 * d * d
+        if ffn == "moe":
+            total += mlp_params(cfg.moe.num_experts, cfg.moe.top_k,
+                                active=active_only) + d * cfg.moe.num_experts
+        elif ffn == "mlp":
+            total += mlp_params()
+    if cfg.family == "encdec":
+        for _ in range(cfg.enc_layers):
+            total += attn_params() * 2 + mlp_params()  # self + cross (in dec)
+    return float(total)
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N_active·tokens for training; 2·N_active·tokens for fwd/decode."""
+    n_active = count_params(cfg, active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

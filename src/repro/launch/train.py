@@ -1,0 +1,96 @@
+"""Training driver: runs real steps on whatever devices exist.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --steps 50 --optimizer fednl
+
+On the CPU container this trains the reduced (smoke) configs; pointed at
+a TPU slice the same code paths run the full configs on the production
+mesh (the dry-run proves those lower+compile).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save as save_ckpt
+from repro.configs import ARCHS, get_config
+from repro.data.tokens import TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import (make_activation_sharder,
+                                   make_layer_param_constrainer,
+                                   tree_param_specs)
+from repro.launch.steps import make_optimizer, make_train_step
+from repro.models import build_model
+from repro.models.common import set_activation_sharder
+
+
+def add_modality_inputs(batch, cfg, step: int):
+    key = jax.random.fold_in(jax.random.PRNGKey(1234), step)
+    b = batch["tokens"].shape[0]
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.vision_tokens, cfg.d_model), cfg.jdtype) * 0.02
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.enc_seq, cfg.d_model), cfg.jdtype) * 0.02
+    return batch
+
+
+def train(arch: str, smoke: bool = True, steps: int = 20, batch: int = 8,
+          seq: int = 128, lr: float = 3e-4, optimizer: str = "adamw",
+          microbatches: int = 1, log_every: int = 10, ckpt: str | None = None,
+          seed: int = 0):
+    cfg = get_config(arch, smoke=smoke)
+    mesh = make_host_mesh()
+    set_activation_sharder(make_activation_sharder(mesh),
+                           make_layer_param_constrainer(mesh, cfg))
+    model = build_model(cfg, use_remat=True)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    opt = make_optimizer(optimizer, lr)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt, microbatches=microbatches))
+
+    t_text = seq - (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    pipe = TokenPipeline(vocab_size=cfg.vocab, seq_len=t_text,
+                         global_batch=batch, seed=seed)
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        b = add_modality_inputs(pipe.batch(i), cfg, i)
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        history.append(float(metrics["loss"]))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:5d} loss {history[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+    if ckpt:
+        save_ckpt(ckpt, {"params": params}, step=steps)
+        print(f"checkpoint -> {ckpt}")
+    return history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "sgd", "fednl"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    train(args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
+          seq=args.seq, lr=args.lr, optimizer=args.optimizer,
+          microbatches=args.microbatches, ckpt=args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

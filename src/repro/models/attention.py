@@ -1,0 +1,279 @@
+"""Attention: GQA (+ RoPE, sliding window, QKV bias) and MLA (MiniCPM3-style
+multi-head latent attention with decoupled RoPE), with train forward and
+single-token decode against a KV cache.
+
+Cache layouts:
+  GQA: {"k": (B, S, KV, hd), "v": (B, S, KV, hd)}
+  MLA: {"ckv": (B, S, kv_lora), "krope": (B, S, rope_dim)}  — the latent
+       cache is what makes MLA's decode memory small.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, causal_mask, decode_mask, dense_init, shard_act
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, cfg.jdtype),
+        "wk": dense_init(ks[1], d, kv * hd, cfg.jdtype),
+        "wv": dense_init(ks[2], d, kv * hd, cfg.jdtype),
+        "wo": dense_init(ks[3], h * hd, d, cfg.jdtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), cfg.jdtype)
+        p["bk"] = jnp.zeros((kv * hd,), cfg.jdtype)
+        p["bv"] = jnp.zeros((kv * hd,), cfg.jdtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    b, t, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(b, t, h, hd), k.reshape(b, t, kv, hd), v.reshape(b, t, kv, hd))
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q: (B,T,H,hd); k/v: (B,S,KV,hd); mask: (T,S) or (B,T,S) bool."""
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    qg = q.reshape(b, t, kv, n_rep, hd)
+    scores = jnp.einsum("btkrh,bskh->bkrts", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask[None, None, None] if mask.ndim == 2 else mask[:, None, None],
+                       scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrts,bskh->btkrh", w, v)
+    return out.reshape(b, t, h, hd)
+
+
+# Query-chunk size for long sequences: bounds the live f32 score block to
+# (B, H, CHUNK, S) instead of (B, H, T, S) — the XLA-path analogue of flash
+# attention's tiling (the Pallas kernel does the full online-softmax version).
+SDPA_CHUNK = 256
+
+
+def _sdpa_chunked(q, k, v, n_rep: int, window, chunk: int = SDPA_CHUNK):
+    """Causal attention, scanning over query chunks. q: (B,T,H,hd) with
+    query i at absolute position i; k/v: (B,T,KV,hd)."""
+    b, t, h, hd = q.shape
+    kv = k.shape[2]
+    pad = (-t) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = q.shape[1] // chunk
+    qc = q.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)   # (nc,B,c,H,hd)
+
+    @jax.checkpoint  # don't let autodiff stack per-chunk softmax weights
+    def one_chunk(qi, ci):
+        qpos = ci * chunk + jnp.arange(chunk)                      # (c,)
+        j = jnp.arange(t)
+        mask = j[None, :] <= qpos[:, None]
+        if window is not None:
+            mask = jnp.logical_and(mask, j[None, :] > qpos[:, None] - window)
+        return _sdpa(qi, k, v, mask, n_rep)
+
+    def body(_, inp):
+        qi, ci = inp
+        return (), one_chunk(qi, ci)
+
+    _, out = jax.lax.scan(body, (), (qc, jnp.arange(nc)))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, hd)
+    return out[:, :t]
+
+
+def gqa_forward(p, x, cfg: ModelConfig, positions=None):
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_act(q, "bthd")
+    k = shard_act(k, "bthd")
+    v = shard_act(v, "bthd")
+    if t > 2 * SDPA_CHUNK:
+        out = _sdpa_chunked(q, k, v, cfg.n_heads // cfg.kv_heads,
+                            cfg.sliding_window)
+    else:
+        mask = causal_mask(t, cfg.sliding_window)
+        out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.kv_heads)
+    y = out.reshape(b, t, cfg.n_heads * cfg.hd) @ p["wo"]
+    return shard_act(y, "btd"), {"k": k, "v": v}
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    kv, hd = cfg.kv_heads, cfg.hd
+    shape = (batch, max_len, kv, hd)
+    return {"k": jnp.zeros(shape, cfg.jdtype), "v": jnp.zeros(shape, cfg.jdtype)}
+
+
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig):
+    """x: (B, 1, d); pos: () int — absolute position of the new token."""
+    b = x.shape[0]
+    q, k, v = _qkv(p, x, cfg)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.rope:
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1),
+    }
+    s = cache["k"].shape[1]
+    mask = decode_mask(s, pos, cfg.sliding_window)[None, :]    # (1, S)
+    out = _sdpa(q, cache["k"], cache["v"], mask, cfg.n_heads // cfg.kv_heads)
+    y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_forward(p, x, memory, cfg: ModelConfig):
+    """Full (non-causal) attention of x over encoder memory."""
+    b, t, _ = x.shape
+    s = memory.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, t, h, hd)
+    k = (memory @ p["wk"]).reshape(b, s, kv, hd)
+    v = (memory @ p["wv"]).reshape(b, s, kv, hd)
+    mask = jnp.ones((t, s), bool)
+    out = _sdpa(q, k, v, mask, h // kv)
+    return out.reshape(b, t, h * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": dense_init(ks[0], d, m.q_lora_rank, cfg.jdtype),
+        "wuq": dense_init(ks[1], m.q_lora_rank, h * qd, cfg.jdtype),
+        "wdkv": dense_init(ks[2], d, m.kv_lora_rank, cfg.jdtype),
+        "wkrope": dense_init(ks[3], d, m.qk_rope_dim, cfg.jdtype),
+        "wuk": dense_init(ks[4], m.kv_lora_rank, h * m.qk_nope_dim, cfg.jdtype),
+        "wuv": dense_init(ks[5], m.kv_lora_rank, h * m.v_head_dim, cfg.jdtype),
+        "wo": dense_init(ks[6], h * m.v_head_dim, d, cfg.jdtype,
+                         scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _mla_qk(p, x, positions, cfg: ModelConfig):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    q = (x @ p["wdq"]) @ p["wuq"]
+    q = q.reshape(b, t, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = x @ p["wdkv"]                                  # (b, t, kv_lora)
+    krope = apply_rope((x @ p["wkrope"])[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]       # (b, t, rope_dim)
+    return q_nope, q_rope, ckv, krope
+
+
+def _mla_attend(p, q_nope, q_rope, ckv, krope, mask, cfg: ModelConfig):
+    m = cfg.mla
+    b, t, h, _ = q_nope.shape
+    s = ckv.shape[1]
+    k_nope = (ckv @ p["wuk"]).reshape(b, s, h, m.qk_nope_dim)
+    v = (ckv @ p["wuv"]).reshape(b, s, h, m.v_head_dim)
+    scores = (jnp.einsum("bthd,bshd->bhts", q_nope, k_nope)
+              + jnp.einsum("bthd,bsd->bhts", q_rope,
+                           jnp.broadcast_to(krope[:, :, :], (b, s, m.qk_rope_dim)))
+              ).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(m.qk_nope_dim + m.qk_rope_dim))
+    scores = jnp.where(mask[None, None] if mask.ndim == 2 else mask[:, None],
+                       scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhts,bshd->bthd", w, v)
+    return out.reshape(b, t, h * m.v_head_dim) @ p["wo"]
+
+
+def mla_forward(p, x, cfg: ModelConfig, positions=None):
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    q_nope, q_rope, ckv, krope = _mla_qk(p, x, positions, cfg)
+    if t > 2 * SDPA_CHUNK:
+        y = _mla_attend_chunked(p, q_nope, q_rope, ckv, krope, cfg)
+    else:
+        mask = causal_mask(t, cfg.sliding_window)
+        y = _mla_attend(p, q_nope, q_rope, ckv, krope, mask, cfg)
+    return shard_act(y, "btd"), {"ckv": ckv, "krope": krope}
+
+
+def _mla_attend_chunked(p, q_nope, q_rope, ckv, krope, cfg: ModelConfig,
+                        chunk: int = SDPA_CHUNK):
+    b, t, h, _ = q_nope.shape
+    pad = (-t) % chunk
+    if pad:
+        q_nope = jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_rope = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = q_nope.shape[1] // chunk
+    qn = q_nope.reshape(b, nc, chunk, h, -1).transpose(1, 0, 2, 3, 4)
+    qr = q_rope.reshape(b, nc, chunk, h, -1).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint  # see _sdpa_chunked
+    def one_chunk(qni, qri, ci):
+        qpos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.arange(t)[None, :] <= qpos[:, None]
+        return _mla_attend(p, qni, qri, ckv, krope, mask, cfg)
+
+    def body(_, inp):
+        qni, qri, ci = inp
+        return (), one_chunk(qni, qri, ci)
+
+    _, out = jax.lax.scan(body, (), (qn, qr, jnp.arange(nc)))
+    out = out.transpose(1, 0, 2, 3).reshape(b, nc * chunk, -1)
+    return out[:, :t]
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), cfg.jdtype),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope_dim), cfg.jdtype),
+    }
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+    b = x.shape[0]
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, ckv, krope = _mla_qk(p, x, posv, cfg)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, pos, axis=1),
+        "krope": jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope, pos, axis=1),
+    }
+    s = cache["ckv"].shape[1]
+    mask = decode_mask(s, pos)[None, :]
+    y = _mla_attend(p, q_nope, q_rope, cache["ckv"], cache["krope"], mask, cfg)
+    return y, cache

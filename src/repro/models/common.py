@@ -1,0 +1,147 @@
+"""Shared building blocks: initializers, norms, RoPE, masking, sharding hooks."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Activation-sharding hook. The launcher installs a mesh-aware constraint
+# function; models call shard_act(x, kind) at a few strategic points. In
+# unit tests (no mesh) this is the identity.
+# ---------------------------------------------------------------------------
+
+_ACT_CONSTRAINT = None  # Callable[(Array, str) -> Array] | None
+_LAYER_PARAM_CONSTRAINT = None  # Callable[(pytree) -> pytree] | None
+
+
+def set_activation_sharder(fn, layer_param_fn=None) -> None:
+    global _ACT_CONSTRAINT, _LAYER_PARAM_CONSTRAINT
+    _ACT_CONSTRAINT = fn
+    _LAYER_PARAM_CONSTRAINT = layer_param_fn
+
+
+def shard_act(x: jax.Array, kind: str) -> jax.Array:
+    """kind in {'btd', 'btf', 'bthd', 'logits'} — see launch/sharding.py."""
+    if _ACT_CONSTRAINT is None:
+        return x
+    return _ACT_CONSTRAINT(x, kind)
+
+
+def shard_layer_params(tree):
+    """Pin the per-layer param slice (inside the scan body) to its natural
+    sharding. Without this XLA hoists the FSDP all-gather of the *stacked*
+    scan parameters out of the loop — peak memory then holds every layer's
+    weights unsharded at once."""
+    if _LAYER_PARAM_CONSTRAINT is None:
+        return tree
+    return _LAYER_PARAM_CONSTRAINT(tree)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0) -> jax.Array:
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dtype) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mean) * jax.lax.rsqrt(var + eps)).astype(dtype) * w + b
+
+
+def norm_params(key, d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); positions: (..., T) int32. Rotates pairs."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(t: int, window: Optional[int] = None) -> jax.Array:
+    """(t, t) bool, True = attendable. Optional sliding window."""
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    mask = j <= i
+    if window is not None:
+        mask = jnp.logical_and(mask, j > i - window)
+    return mask
+
+
+def decode_mask(cache_len: int, pos: jax.Array, window: Optional[int] = None) -> jax.Array:
+    """(cache_len,) bool for one query at absolute position ``pos``."""
+    j = jnp.arange(cache_len)
+    mask = j <= pos
+    if window is not None:
+        mask = jnp.logical_and(mask, j > pos - window)
+    return mask
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V), targets (...) int.
+
+    The gold logit is picked with an iota-mask reduce rather than
+    take_along_axis: a gather across the vocab dimension would force
+    GSPMD to all-gather the (B, T, V) logits when V is sharded over the
+    'model' axis, while iota+select+reduce partitions cleanly (the mask
+    fuses into the reduction, nothing is materialized)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(idx == targets[..., None], logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)

@@ -1,0 +1,164 @@
+"""Mamba (selective SSM) block for the Jamba hybrid stack.
+
+Standard Mamba-1 structure: in_proj -> (u, z); short causal depthwise
+conv; data-dependent (Delta, B, C) projections; diagonal selective SSM
+
+    h_t = exp(Delta_t A) h_{t-1} + Delta_t B_t u_t
+    y_t = C_t . h_t + D u_t
+
+Training uses ``jax.lax.associative_scan`` over time (log-depth on TPU —
+this is the TPU-native adaptation of the CUDA selective-scan kernel).
+Decode keeps (conv window, ssm state) as the per-layer cache — O(1) per
+token, which is why Jamba runs the 524k-token shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, shard_act
+from .config import ModelConfig
+
+
+def mamba_init(key, cfg: ModelConfig):
+    m = cfg.mamba
+    d = cfg.d_model
+    di = m.expand * d
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A
+    a = -jnp.tile(jnp.arange(1, m.d_state + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "win": dense_init(ks[0], d, 2 * di, cfg.jdtype),
+        "conv": (jax.random.normal(ks[1], (m.d_conv, di)) / m.d_conv).astype(cfg.jdtype),
+        "conv_b": jnp.zeros((di,), cfg.jdtype),
+        "wbc": dense_init(ks[2], di, 2 * m.d_state, cfg.jdtype),
+        "wdt": dense_init(ks[3], di, 1, cfg.jdtype),       # rank-1 Delta proj
+        "dt_bias": (jnp.log(jnp.expm1(jnp.exp(
+            jax.random.uniform(ks[4], (di,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))
+        )))).astype(jnp.float32),
+        "a_log": jnp.log(-a),                               # (di, S) fp32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "wout": dense_init(ks[5], di, d, cfg.jdtype,
+                           scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+SSM_CHUNK = 256
+
+
+def _ssm_scan(u, dt, b, c, a, chunk: int = SSM_CHUNK):
+    """u: (B,T,Di); dt: (B,T,Di); b,c: (B,T,S); a: (Di,S). Returns (B,T,Di).
+
+    Recurrence h_t = decay_t h_{t-1} + inc_t with decay_t = exp(dt_t a),
+    inc_t = dt_t b_t u_t (outer over the state dim).
+
+    Memory note: a flat associative_scan over T materializes the
+    (B, T, Di, S) decay/increment tensors — for Jamba's Di = 16384 at
+    T = 4096 that is ~17 GB fp32 *per tensor per device*. We therefore
+    run a sequential lax.scan over chunks of ``chunk`` steps carrying the
+    (B, Di, S) state, with the log-depth associative scan only *inside*
+    a chunk (still parallel on the VPU) and remat around each chunk so
+    autodiff stores one chunk's tensors at a time.
+    """
+
+    def combine(x, y):
+        d1, i1 = x
+        d2, i2 = y
+        return d1 * d2, i1 * d2 + i2
+
+    b_, t, di = u.shape
+    s = b.shape[-1]
+    if t <= chunk:
+        decay = jnp.exp(dt[..., None] * a[None, None])
+        inc = (dt * u)[..., None] * b[:, :, None, :]
+        _, h = jax.lax.associative_scan(combine, (decay, inc), axis=1)
+        return jnp.einsum("btds,bts->btd", h, c)
+
+    pad = (-t) % chunk
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        u, dt, b, c = zp(u), zp(dt), zp(b), zp(c)
+    nc = (t + pad) // chunk
+    split = lambda x: x.reshape(b_, nc, chunk, *x.shape[2:]).transpose(
+        1, 0, 2, *range(3, x.ndim + 1))
+    uc, dtc, bc, cc = split(u), split(dt), split(b), split(c)
+
+    @jax.checkpoint
+    def one_chunk(h0, ui, dti, bi, ci):
+        decay = jnp.exp(dti[..., None] * a[None, None])      # (B,chunk,Di,S)
+        inc = (dti * ui)[..., None] * bi[:, :, None, :]
+        # fold the carried state into the first increment
+        inc = inc.at[:, 0].add(decay[:, 0] * h0)
+        _, h = jax.lax.associative_scan(combine, (decay, inc), axis=1)
+        y = jnp.einsum("btds,bts->btd", h, ci)
+        return h[:, -1], y
+
+    def body(h0, xs):
+        ui, dti, bi, ci = xs
+        return one_chunk(h0, ui, dti, bi, ci)
+
+    h_init = jnp.zeros((b_, di, s), u.dtype)
+    _, ys = jax.lax.scan(body, h_init, (uc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b_, t + pad, di)
+    return y[:, :t]
+
+
+def mamba_forward(p, x, cfg: ModelConfig):
+    m = cfg.mamba
+    b_, t, d = x.shape
+    di = m.expand * d
+    uz = x @ p["win"]
+    u, z = jnp.split(uz, 2, axis=-1)                        # (B,T,Di) each
+
+    # causal depthwise conv over the last d_conv steps
+    u_pad = jnp.pad(u, ((0, 0), (m.d_conv - 1, 0), (0, 0)))
+    conv = sum(u_pad[:, i : i + t] * p["conv"][i] for i in range(m.d_conv))
+    u = jax.nn.silu(conv + p["conv_b"])
+    u = shard_act(u, "btf")
+
+    bc = u @ p["wbc"]
+    b_in, c_in = jnp.split(bc.astype(jnp.float32), 2, axis=-1)   # (B,T,S)
+    dt = jax.nn.softplus((u @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    y = _ssm_scan(u.astype(jnp.float32), dt, b_in, c_in, a)
+    y = y + p["d_skip"] * u.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["wout"]
+    return shard_act(y, "btd")
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int):
+    m = cfg.mamba
+    di = m.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, di), cfg.jdtype),
+        "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cache, cfg: ModelConfig):
+    """x: (B, 1, d); O(1) state update."""
+    m = cfg.mamba
+    b_, _, d = x.shape
+    uz = x @ p["win"]
+    u, z = jnp.split(uz, 2, axis=-1)                        # (B,1,Di)
+
+    window = jnp.concatenate([cache["conv"], u], axis=1)    # (B, d_conv, Di)
+    conv = jnp.einsum("bkd,kd->bd", window, p["conv"])[:, None]
+    u_act = jax.nn.silu(conv + p["conv_b"])
+
+    bc = u_act @ p["wbc"]
+    b_in, c_in = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+    dt = jax.nn.softplus((u_act @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    decay = jnp.exp(dt[:, 0, :, None] * a[None])            # (B,Di,S)
+    inc = (dt[:, 0] * u_act[:, 0].astype(jnp.float32))[..., None] * b_in[:, 0, None, :]
+    ssm = cache["ssm"] * decay + inc
+    y = jnp.einsum("bds,bs->bd", ssm, c_in[:, 0])[:, None]
+    y = y + p["d_skip"] * u_act.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["wout"]
+
+    cache = {"conv": window[:, 1:], "ssm": ssm}
+    return y, cache

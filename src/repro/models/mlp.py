@@ -1,0 +1,145 @@
+"""Feed-forward blocks: dense MLP (swiglu / gelu) and capacity-based MoE.
+
+The MoE dispatch is the GSPMD-friendly one-hot/capacity formulation
+(Switch-Transformer style): tokens are routed in fixed-size groups, each
+expert takes at most C = ceil(top_k * group * cf / E) tokens per group,
+and dispatch/combine are einsums — all static shapes, MXU-friendly, and
+shardable with experts over the "model" mesh axis (all-to-all inserted by
+GSPMD at the (group, expert) boundary). Overflow tokens are dropped
+(standard capacity semantics); an auxiliary load-balance loss keeps the
+router near-uniform.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, shard_act
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wi": dense_init(ks[0], d, ff, cfg.jdtype),
+            "wg": dense_init(ks[1], d, ff, cfg.jdtype),
+            "wo": dense_init(ks[2], ff, d, cfg.jdtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+        }
+    return {
+        "wi": dense_init(ks[0], d, ff, cfg.jdtype),
+        "wo": dense_init(ks[2], ff, d, cfg.jdtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def mlp_forward(p, x, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    h = shard_act(h, "btf")
+    return x_out_cast(h @ p["wo"], x)
+
+
+def x_out_cast(y, x):
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    scale_o = 1.0 / (2 * cfg.n_layers) ** 0.5
+
+    def stack(k, din, dout, scale=1.0):
+        keys = jax.random.split(k, e)
+        return jnp.stack([dense_init(kk, din, dout, cfg.jdtype, scale) for kk in keys])
+
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "wi": stack(ks[1], d, ff),
+        "wo": stack(ks[2], ff, d, scale_o),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["wg"] = stack(ks[3], d, ff)
+    return p
+
+
+def _route(router_logits: jax.Array, cfg: ModelConfig):
+    """router_logits: (G, E). Returns dispatch (G, E, C) bool-ish,
+    combine (G, E, C) float, aux loss scalar."""
+    moe = cfg.moe
+    g, e = router_logits.shape
+    k = moe.top_k
+    c = max(1, math.ceil(k * g * moe.capacity_factor / e))
+
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_ids = jax.lax.top_k(probs, k)                  # (G, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # slot-major priority: slot 0 of every token first
+    masks = jax.nn.one_hot(gate_ids, e, dtype=jnp.float32)         # (G, k, E)
+    flat = masks.transpose(1, 0, 2).reshape(k * g, e)              # (k*G, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                          # position in expert
+    keep = (pos < c) * flat                                        # drop overflow
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), c, dtype=jnp.float32)
+    disp_flat = keep[..., None] * pos_oh                           # (k*G, E, C)
+    disp = disp_flat.reshape(k, g, e, c).transpose(1, 0, 2, 3)     # (G, k, E, C)
+
+    combine = jnp.einsum("gk,gkec->gec", gate_vals, disp)
+    dispatch = jnp.sum(disp, axis=1)                               # (G, E, C)
+
+    # load-balance auxiliary loss (Switch eq. 4)
+    frac_tokens = jnp.mean(jnp.sum(masks, axis=1), axis=0)         # (E,)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return dispatch, combine, aux
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """x: (B, T, d) -> (y, aux_loss)."""
+    b, t, d = x.shape
+    moe = cfg.moe
+    gsz = min(moe.group_size, b * t)
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    pad = (-n_tok) % gsz
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    groups = shard_act(tokens.reshape(-1, gsz, d), "moe_route")    # (NG, G, d)
+
+    logits = jnp.einsum("ngd,de->nge", groups.astype(jnp.float32), p["router"])
+    dispatch, combine, aux = jax.vmap(lambda l: _route(l, cfg))(logits)
+    dispatch = shard_act(dispatch, "moe_route")
+    combine = shard_act(combine, "moe_route")
+    aux = jnp.mean(aux)
+
+    xin = jnp.einsum("ngec,ngd->necd", dispatch.astype(groups.dtype), groups)
+    xin = shard_act(xin, "ecf")
+    # expert MLP, batched over (NG, E)
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("necd,edf->necf", xin, p["wg"])) \
+            * jnp.einsum("necd,edf->necf", xin, p["wi"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("necd,edf->necf", xin, p["wi"]))
+    h = shard_act(h, "ecf")
+    xout = jnp.einsum("necf,efd->necd", h, p["wo"])
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(groups.dtype), xout)
+
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:n_tok]
+    return y.reshape(b, t, d), aux

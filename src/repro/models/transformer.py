@@ -1,0 +1,399 @@
+"""Model assembly: block programs per family, scan-over-layers with remat,
+train loss / prefill / single-token decode.
+
+Families
+  dense | moe : uniform decoder blocks, one lax.scan over all layers
+  hybrid      : Jamba periods (attn_every-1 Mamba + 1 attention; MoE on
+                odd layers) — scan over periods
+  ssm         : xLSTM periods (slstm_every-1 mLSTM + 1 sLSTM)
+  encdec      : Whisper — encoder scan + decoder scan with cross-attention
+  vlm         : LLaVA — dense LM consuming [patch embeddings ; tokens]
+
+All parameters are plain nested dicts of jnp arrays (stacked on a leading
+layer/period axis for scanned segments); sharding is attached by path
+rules in launch/sharding.py so model code stays mesh-free apart from
+``shard_act`` hints.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mam
+from . import mlp as ff
+from . import xlstm as xl
+from .common import (apply_norm, cross_entropy, embed_init, norm_params,
+                     shard_act, shard_layer_params)
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Block program
+# ---------------------------------------------------------------------------
+
+
+def layer_kinds(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """(mixer, ffn) kind per decoder layer."""
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "hybrid":
+            mixer = "attn" if (i % cfg.attn_every == cfg.attn_every - 1) else "mamba"
+            ffn = "moe" if (cfg.moe is not None and i % cfg.moe_every == 1) else "mlp"
+        elif cfg.family == "ssm":
+            mixer = "slstm" if (i % cfg.xlstm.slstm_every == cfg.xlstm.slstm_every - 1) \
+                else "mlstm"
+            ffn = "none" if cfg.d_ff == 0 else "mlp"
+        else:
+            mixer = "mla" if cfg.attn_type == "mla" else "attn"
+            ffn = "moe" if cfg.moe is not None else "mlp"
+        kinds.append((mixer, ffn))
+    return kinds
+
+
+def period_len(cfg: ModelConfig) -> int:
+    """Layers per scanned segment (1 for uniform stacks)."""
+    if cfg.family == "hybrid":
+        p = cfg.attn_every
+        if cfg.moe is not None:
+            p = max(p, 2) if p % 2 == 0 else p * 2
+        return p
+    if cfg.family == "ssm":
+        return cfg.xlstm.slstm_every
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Single-layer init / forward / decode
+# ---------------------------------------------------------------------------
+
+_MIXER_INIT = {"attn": attn.gqa_init, "mla": attn.mla_init,
+               "mamba": mam.mamba_init, "mlstm": xl.mlstm_init,
+               "slstm": xl.slstm_init}
+
+
+def _layer_init(key, cfg: ModelConfig, mixer: str, ffn: str, cross: bool):
+    ks = jax.random.split(key, 6)
+    p = {
+        "norm1": norm_params(ks[0], cfg.d_model, cfg.norm, cfg.jdtype),
+        "mixer": _MIXER_INIT[mixer](ks[1], cfg),
+    }
+    if ffn != "none":
+        p["norm2"] = norm_params(ks[2], cfg.d_model, cfg.norm, cfg.jdtype)
+        p["ffn"] = ff.moe_init(ks[3], cfg) if ffn == "moe" else ff.mlp_init(ks[3], cfg)
+    if cross:
+        p["norm_x"] = norm_params(ks[4], cfg.d_model, cfg.norm, cfg.jdtype)
+        p["cross"] = attn.gqa_init(ks[5], cfg)
+    return p
+
+
+def _layer_forward(p, x, cfg: ModelConfig, mixer: str, ffn: str,
+                   memory: Optional[jax.Array] = None, causal: bool = True):
+    h = apply_norm(x, p["norm1"], cfg.norm)
+    if mixer == "attn":
+        if causal:
+            y, cache = attn.gqa_forward(p["mixer"], h, cfg)
+        else:  # encoder self-attention
+            b, t, _ = h.shape
+            q, k, v = attn._qkv(p["mixer"], h, cfg)
+            mask = jnp.ones((t, t), bool)
+            out = attn._sdpa(q, k, v, mask, cfg.n_heads // cfg.kv_heads)
+            y = out.reshape(b, t, -1) @ p["mixer"]["wo"]
+            cache = None
+    elif mixer == "mla":
+        y, cache = attn.mla_forward(p["mixer"], h, cfg)
+    elif mixer == "mamba":
+        y = mam.mamba_forward(p["mixer"], h, cfg)
+        cache = None
+    elif mixer == "mlstm":
+        y = xl.mlstm_forward(p["mixer"], h, cfg)
+        cache = None
+    else:  # slstm
+        y = xl.slstm_forward(p["mixer"], h, cfg)
+        cache = None
+    x = x + y
+
+    if memory is not None:
+        hx = apply_norm(x, p["norm_x"], cfg.norm)
+        x = x + attn.cross_forward(p["cross"], hx, memory, cfg)
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "moe":
+        h2 = apply_norm(x, p["norm2"], cfg.norm)
+        y2, aux = ff.moe_forward(p["ffn"], h2, cfg)
+        x = x + y2
+    elif ffn == "mlp":
+        h2 = apply_norm(x, p["norm2"], cfg.norm)
+        x = x + ff.mlp_forward(p["ffn"], h2, cfg)
+    return x, aux
+
+
+def _layer_init_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int):
+    if mixer == "attn":
+        return attn.gqa_init_cache(cfg, batch, max_len)
+    if mixer == "mla":
+        return attn.mla_init_cache(cfg, batch, max_len)
+    if mixer == "mamba":
+        return mam.mamba_init_cache(cfg, batch)
+    if mixer == "mlstm":
+        return xl.mlstm_init_cache(cfg, batch)
+    return xl.slstm_init_cache(cfg, batch)
+
+
+def _layer_decode(p, x, cache, pos, cfg: ModelConfig, mixer: str, ffn: str,
+                  memory: Optional[jax.Array] = None):
+    h = apply_norm(x, p["norm1"], cfg.norm)
+    if mixer == "attn":
+        y, cache = attn.gqa_decode(p["mixer"], h, cache, pos, cfg)
+    elif mixer == "mla":
+        y, cache = attn.mla_decode(p["mixer"], h, cache, pos, cfg)
+    elif mixer == "mamba":
+        y, cache = mam.mamba_decode(p["mixer"], h, cache, cfg)
+    elif mixer == "mlstm":
+        y, cache = xl.mlstm_decode(p["mixer"], h, cache, cfg)
+    else:
+        y, cache = xl.slstm_decode(p["mixer"], h, cache, cfg)
+    x = x + y
+
+    if memory is not None:
+        hx = apply_norm(x, p["norm_x"], cfg.norm)
+        x = x + attn.cross_forward(p["cross"], hx, memory, cfg)
+
+    if ffn != "none":
+        h2 = apply_norm(x, p["norm2"], cfg.norm)
+        if ffn == "moe":
+            y2, _ = ff.moe_forward(p["ffn"], h2, cfg)
+            x = x + y2
+        else:
+            x = x + ff.mlp_forward(p["ffn"], h2, cfg)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Sinusoidal positions (whisper — works at any length, no table)
+# ---------------------------------------------------------------------------
+
+
+def sinusoid(t: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Functional model wrapper: params are explicit pytrees."""
+
+    def __init__(self, cfg: ModelConfig, use_remat: bool = True,
+                 unroll: bool = False):
+        """``unroll=True`` replaces the layer scans with Python loops so
+        XLA cost analysis counts every layer (used by the dry-run's cost
+        probes — scan bodies are otherwise counted once)."""
+        self.cfg = cfg
+        self.use_remat = use_remat
+        self.unroll = unroll
+        self.kinds = layer_kinds(cfg)
+        self.period = period_len(cfg)
+        assert cfg.n_layers % self.period == 0, (cfg.n_layers, self.period)
+        self.n_segments = cfg.n_layers // self.period
+
+    # -- init ----------------------------------------------------------------
+
+    def init_params(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params: Params = {
+            "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.jdtype),
+            "norm_f": norm_params(ks[1], cfg.d_model, cfg.norm, cfg.jdtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(ks[2], cfg.vocab, cfg.d_model, cfg.jdtype)
+
+        # decoder stack: stack per-period params along axis 0
+        def init_segment(seg_key):
+            kk = jax.random.split(seg_key, self.period)
+            seg = []
+            for j in range(self.period):
+                mixer, ffn = self.kinds[j]          # same pattern in every period
+                seg.append(_layer_init(kk[j], cfg, mixer, ffn,
+                                       cross=cfg.family == "encdec"))
+            return seg
+
+        seg_keys = jax.random.split(ks[3], self.n_segments)
+        segments = [init_segment(k) for k in seg_keys]
+        # stack: layers[j] is the j-th block within a period, stacked over periods
+        params["layers"] = [
+            jax.tree.map(lambda *xs: jnp.stack(xs), *[s[j] for s in segments])
+            for j in range(self.period)
+        ]
+
+        if cfg.family == "encdec":
+            enc_keys = jax.random.split(ks[4], cfg.enc_layers)
+            enc = [_layer_init(k, cfg, "attn", "mlp", cross=False) for k in enc_keys]
+            params["enc_layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+            params["enc_norm_f"] = norm_params(ks[5], cfg.d_model, cfg.norm, cfg.jdtype)
+        return params
+
+    # -- embedding frontends ----------------------------------------------------
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        if cfg.family == "encdec":
+            t = x.shape[1]
+            x = x + sinusoid(t, cfg.d_model, x.dtype)
+        return shard_act(x, "btd")
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(cfg.jdtype) + sinusoid(frames.shape[1], cfg.d_model,
+                                                 cfg.jdtype)
+
+        def body(x, p):
+            p = shard_layer_params(p)
+            y, _ = _layer_forward(p, x, cfg, "attn", "mlp", causal=False)
+            return y, None
+
+        if self.use_remat:
+            body = jax.checkpoint(body)
+        if self.unroll:
+            for i in range(cfg.enc_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_layers"]))
+        else:
+            x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return apply_norm(x, params["enc_norm_f"], cfg.norm)
+
+    # -- decoder stack ------------------------------------------------------------
+
+    def _stack_forward(self, params, x, memory=None):
+        cfg = self.cfg
+
+        def body(carry, seg_params):
+            x, aux = carry
+            seg_params = shard_layer_params(seg_params)
+            for j in range(self.period):
+                mixer, ffn = self.kinds[j]
+                x, a = _layer_forward(seg_params[j], x, cfg, mixer, ffn,
+                                      memory=memory)
+                aux = aux + a
+            x = shard_act(x, "carry")   # seq-parallel remat stash
+            return (x, aux), None
+
+        if self.use_remat:
+            body = jax.checkpoint(body)
+
+        # zip the per-period param list into a single scanned pytree (tuple)
+        stacked = tuple(params["layers"])
+        carry = (x, jnp.zeros((), jnp.float32))
+        if self.unroll:
+            for i in range(self.n_segments):
+                seg = jax.tree.map(lambda a: a[i], stacked)
+                carry, _ = body(carry, seg)
+            x, aux = carry
+        else:
+            (x, aux), _ = jax.lax.scan(lambda c, p: body(c, p), carry, stacked)
+        return x, aux
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(x, params["norm_f"], cfg.norm)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("btd,vd->btv", x, head)
+        return shard_act(logits, "logits")
+
+    # -- public API -----------------------------------------------------------
+
+    def forward(self, params, batch):
+        memory = None
+        if self.cfg.family == "encdec":
+            memory = self._encode(params, batch["frames"])
+        x = self._embed_inputs(params, batch)
+        x, aux = self._stack_forward(params, x, memory=memory)
+        return self._logits(params, x), aux
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        if cfg.family == "vlm":          # loss on text positions only
+            logits = logits[:, self.cfg.vision_tokens:]
+        loss = cross_entropy(logits, batch["targets"])
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.router_aux_weight * aux
+        return loss
+
+    # -- serving ----------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int):
+        """Stacked (over periods) per-block caches + optional encoder memory."""
+        cfg = self.cfg
+
+        def one(j):
+            mixer, _ = self.kinds[j]
+            c = _layer_init_cache(cfg, mixer, batch, max_len)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_segments,) + a.shape), c)
+
+        cache = {"blocks": [one(j) for j in range(self.period)]}
+        if cfg.family == "encdec":
+            cache["enc"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), cfg.jdtype)
+        return cache
+
+    def decode_step(self, params, cache, token, pos):
+        """token: (B, 1) int32; pos: () int32 absolute position.
+        Returns (logits (B, 1, V), new cache)."""
+        cfg = self.cfg
+        x = params["embed"][token]
+        memory = cache.get("enc") if cfg.family == "encdec" else None
+        if cfg.family == "encdec":
+            # sinusoidal position for the new token
+            x = x + sinusoid_at(pos, cfg.d_model, x.dtype)
+
+        kinds = self.kinds[: self.period]
+
+        def body(x, pcs):
+            seg_params, seg_caches = pcs
+            seg_params = shard_layer_params(seg_params)
+            new_caches = []
+            for j, (mixer, ffn) in enumerate(kinds):
+                x, c2 = _layer_decode(seg_params[j], x, seg_caches[j], pos,
+                                      cfg, mixer, ffn, memory=memory)
+                new_caches.append(c2)
+            return x, tuple(new_caches)
+
+        xs = (tuple(params["layers"]), tuple(cache["blocks"]))
+        if self.unroll:
+            outs = []
+            for i in range(self.n_segments):
+                x, c2 = body(x, jax.tree.map(lambda a: a[i], xs))
+                outs.append(c2)
+            new_block_caches = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        else:
+            x, new_block_caches = jax.lax.scan(body, x, xs)
+
+        logits = self._logits(params, x)
+        out_cache = dict(cache)
+        out_cache["blocks"] = list(new_block_caches)
+        return logits, out_cache
+
+
+def sinusoid_at(pos, d: int, dtype) -> jax.Array:
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(dtype)
+
+
+def build_model(cfg: ModelConfig, use_remat: bool = True) -> Model:
+    return Model(cfg, use_remat=use_remat)

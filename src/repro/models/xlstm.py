@@ -1,0 +1,245 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM and sLSTM.
+
+mLSTM — matrix-memory LSTM with exponential gating; per head h:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (hd x hd matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t
+    y_t = C_t q_t / max(|n_t^T q_t|, exp(-m_t))   (stabilized)
+Training uses the *chunkwise-parallel* form (the TPU adaptation of the
+FlashLinearAttention-style recurrence): quadratic attention within chunks
+of length ``chunk`` + a carried inter-chunk state — sub-quadratic overall,
+O(1)-state decode.
+
+sLSTM — scalar-memory LSTM with hidden-to-gate recurrence (inherently
+sequential; lax.scan over time), one per ``slstm_every`` blocks (7:1).
+
+This is a faithful-structure implementation with the stabilizer m_t
+tracked in log space as in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, shard_act
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, d, cfg.jdtype),
+        "wk": dense_init(ks[1], d, d, cfg.jdtype),
+        "wv": dense_init(ks[2], d, d, cfg.jdtype),
+        "wif": dense_init(ks[3], d, 2 * h, cfg.jdtype),     # input & forget gates
+        "wo_gate": dense_init(ks[4], d, d, cfg.jdtype),
+        "wout": dense_init(ks[5], d, d, cfg.jdtype,
+                           scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, logf, logi, chunk: int):
+    """q,k,v: (B,H,T,hd); logf,logi: (B,H,T). Chunkwise-parallel mLSTM.
+
+    Within-chunk: decay matrix D_ij = exp(F_i - F_j + logi_j) for j <= i
+    (F = cumsum logf within chunk), applied attention-style.
+    Across chunks: carry (C, n, m) state. Stabilized with running max m.
+    """
+    b, h, t, hd = q.shape
+    nc = t // chunk
+    qc = q.reshape(b, h, nc, chunk, hd)
+    kc = k.reshape(b, h, nc, chunk, hd)
+    vc = v.reshape(b, h, nc, chunk, hd)
+    fc = logf.reshape(b, h, nc, chunk)
+    ic = logi.reshape(b, h, nc, chunk)
+
+    fcum = jnp.cumsum(fc, axis=-1)                         # within-chunk cumsum
+    fsum = fcum[..., -1]                                   # total chunk decay
+
+    def step(carry, inputs):
+        c_state, n_state, m_state = carry                  # (B,H,hd,hd), (B,H,hd), (B,H)
+        qi, ki, vi, fcu, icu, fs = inputs                  # per-chunk slices
+
+        # log weights for contributions of in-chunk position j to i
+        # intra: a_ij = fcu_i - fcu_j + icu_j  (j <= i)
+        intra = fcu[..., :, None] - fcu[..., None, :] + icu[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        intra = jnp.where(tri, intra, -jnp.inf)
+        # inter: state contribution carries log-magnitude m_state + fcu_i
+        inter_log = fcu + m_state[..., None]               # (B,H,L)
+
+        m_new = jnp.maximum(jnp.max(intra, axis=-1), inter_log)   # (B,H,L)
+        m_new = jnp.maximum(m_new, -1e30)
+
+        w_intra = jnp.exp(intra - m_new[..., None])        # (B,H,L,L)
+        w_inter = jnp.exp(inter_log - m_new)               # (B,H,L)
+
+        scores = jnp.einsum("bhid,bhjd->bhij", qi, ki) / jnp.sqrt(float(hd))
+        y_intra = jnp.einsum("bhij,bhij,bhjd->bhid", scores, w_intra, vi)
+        y_inter = w_inter[..., None] * jnp.einsum("bhid,bhde->bhie", qi, c_state) \
+            / jnp.sqrt(float(hd))
+        # normalizer: n^T q with same weights
+        qn_intra = jnp.einsum("bhij,bhij->bhi",
+                              jnp.einsum("bhid,bhjd->bhij", qi, ki) / jnp.sqrt(float(hd)),
+                              w_intra)
+        qn_inter = w_inter * jnp.einsum("bhid,bhd->bhi", qi, n_state) / jnp.sqrt(float(hd))
+        denom = jnp.maximum(jnp.abs(qn_intra + qn_inter), jnp.exp(-m_new))
+        y = (y_intra + y_inter) / denom[..., None]
+
+        # carry state to next chunk: C' = exp(fs) C + sum_j exp(fsum - fcu_j + icu_j) v_j k_j^T
+        carry_log = fs[..., None] - fcu + icu              # (B,H,L)
+        m_carry = jnp.maximum(fs + m_state, jnp.max(carry_log, axis=-1))
+        w_carry = jnp.exp(carry_log - m_carry[..., None])  # (B,H,L)
+        c_new = jnp.exp(fs + m_state - m_carry)[..., None, None] * c_state \
+            + jnp.einsum("bhj,bhjd,bhje->bhde", w_carry, ki, vi)
+        n_new = jnp.exp(fs + m_state - m_carry)[..., None] * n_state \
+            + jnp.einsum("bhj,bhjd->bhd", w_carry, ki)
+        return (c_new, n_new, m_carry), y
+
+    init = (
+        jnp.zeros((b, h, hd, hd), jnp.float32),
+        jnp.zeros((b, h, hd), jnp.float32),
+        jnp.full((b, h), -1e30, jnp.float32),
+    )
+    xs = (
+        qc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+        vc.transpose(2, 0, 1, 3, 4), fcum.transpose(2, 0, 1, 3),
+        ic.transpose(2, 0, 1, 3), fsum.transpose(2, 0, 1),
+    )
+    _, ys = jax.lax.scan(step, init, xs)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, t, hd)
+    return y
+
+
+def mlstm_forward(p, x, cfg: ModelConfig):
+    b, t, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    chunk = min(cfg.xlstm.chunk, t)
+    # pad T to a multiple of chunk
+    pad = (-t) % chunk
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    tp = t + pad
+
+    q = (xp @ p["wq"]).reshape(b, tp, h, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    k = (xp @ p["wk"]).reshape(b, tp, h, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    v = (xp @ p["wv"]).reshape(b, tp, h, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    gates = (xp @ p["wif"]).astype(jnp.float32).reshape(b, tp, h, 2).transpose(0, 2, 1, 3)
+    logi = gates[..., 0]                                   # pre-activation input gate (log space)
+    logf = jax.nn.log_sigmoid(gates[..., 1])               # forget in (0,1), log space
+
+    y = _mlstm_chunk_scan(q, k, v, logf, logi, chunk)
+    y = y.transpose(0, 2, 1, 3).reshape(b, tp, d)[:, :t]
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    return shard_act(((y.astype(x.dtype)) * o) @ p["wout"], "btd")
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p, x, cache, cfg: ModelConfig):
+    b, _, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = (x @ p["wq"]).reshape(b, h, hd).astype(jnp.float32)
+    k = (x @ p["wk"]).reshape(b, h, hd).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(b, h, hd).astype(jnp.float32)
+    gates = (x @ p["wif"]).astype(jnp.float32).reshape(b, h, 2)
+    logi = gates[..., 0]
+    logf = jax.nn.log_sigmoid(gates[..., 1])
+
+    m_new = jnp.maximum(logf + cache["m"], logi)
+    c = jnp.exp(logf + cache["m"] - m_new)[..., None, None] * cache["c"] \
+        + jnp.exp(logi - m_new)[..., None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = jnp.exp(logf + cache["m"] - m_new)[..., None] * cache["n"] \
+        + jnp.exp(logi - m_new)[..., None] * k
+
+    qn = jnp.einsum("bhd,bhd->bh", q, n) / jnp.sqrt(float(hd))
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    y = jnp.einsum("bhd,bhde->bhe", q, c) / jnp.sqrt(float(hd)) / denom[..., None]
+    y = y.reshape(b, 1, d)
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    out = (y.astype(x.dtype) * o) @ p["wout"]
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, cfg.jdtype),      # i, f, z, o pre-acts
+        "wr": dense_init(ks[1], d, 4 * d, cfg.jdtype, scale=0.5),  # recurrent
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "wout": dense_init(ks[2], d, d, cfg.jdtype,
+                           scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _slstm_cell(carry, pre):
+    """carry = (c, n, h, m); pre = x-projection at t (B, 4d) fp32."""
+    c, n, h, m = carry
+    d = c.shape[-1]
+    zi, zf, zz, zo = jnp.split(pre, 4, axis=-1)
+    logi = zi                                               # exp input gate (log)
+    logf = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(logf + m, logi)
+    i_g = jnp.exp(logi - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(zz)
+    o = jax.nn.sigmoid(zo)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(p, x, cfg: ModelConfig):
+    b, t, d = x.shape
+    xs = (x @ p["wx"]).astype(jnp.float32) + p["b"]
+
+    def step(carry, xt):
+        # recurrent contribution from h_{t-1}
+        c, n, h, m = carry
+        pre = xt + (h.astype(x.dtype) @ p["wr"]).astype(jnp.float32)
+        return _slstm_cell((c, n, h, m), pre)
+
+    init = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+            jnp.zeros((b, d), jnp.float32), jnp.full((b, d), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, init, xs.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    return shard_act(y @ p["wout"], "btd")
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(p, x, cache, cfg: ModelConfig):
+    b, _, d = x.shape
+    pre = (x[:, 0] @ p["wx"]).astype(jnp.float32) + p["b"] \
+        + (cache["h"].astype(x.dtype) @ p["wr"]).astype(jnp.float32)
+    (c, n, h, m), hnew = _slstm_cell(
+        (cache["c"], cache["n"], cache["h"], cache["m"]), pre)
+    y = (hnew.astype(x.dtype) @ p["wout"])[:, None]
+    return y, {"c": c, "n": n, "h": h, "m": m}

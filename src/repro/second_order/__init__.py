@@ -1,0 +1,2 @@
+from .optim import adamw, sgd, OptState
+from .fednl_precond import FedNLPrecondOptimizer, fednl_precond

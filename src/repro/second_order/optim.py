@@ -1,0 +1,91 @@
+"""First-order optimizer substrate (written from scratch; no optax).
+
+Functional API mirroring the usual gradient-transform style:
+
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Moments are stored in the dtype of the parameters by default; pass
+``moment_dtype`` to override (bf16 moments keep the 314B/398B configs
+inside v5e HBM at 512 chips — see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment (or momentum), pytree or ()
+    nu: Any          # second moment, pytree or ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else ()
+        return OptState(jnp.zeros((), jnp.int32), mu, ())
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+            upd = jax.tree.map(lambda m: -lr * m, mu)
+        else:
+            mu = ()
+            upd = jax.tree.map(lambda g: -lr * g, grads)
+        return upd, OptState(state.step + 1, mu, ())
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          moment_dtype: Optional[jnp.dtype] = None) -> Optimizer:
+    def init(params):
+        def z(p):
+            dt = moment_dtype or p.dtype
+            return jnp.zeros(p.shape, dt)
+
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m_new / c1
+            vhat = v_new / c2
+            u = -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        upds = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        mus = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        nus = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return upds, OptState(step, mus, nus)
+
+    return Optimizer(init, update)

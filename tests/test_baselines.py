@@ -1,0 +1,96 @@
+"""Baselines converge and their accounting is sane."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import RandomDithering, RandK
+from repro.core.baselines import (Adiana, Artemis, Diana, Dingo, Dore, NL1,
+                                  gd_ls_run, gd_run)
+from repro.core.newton import newton_run
+from repro.core.objectives import (batch_grad, batch_hess, global_value,
+                                   lipschitz_constants)
+from repro.data.synthetic import make_synthetic
+
+
+@pytest.fixture(scope="module")
+def prob():
+    data = make_synthetic(jax.random.PRNGKey(0), alpha=0.5, beta=0.5,
+                          n=8, m=50, d=20, lam=1e-3)
+    grad_fn = lambda x: batch_grad(x, data)
+    hess_fn = lambda x: batch_hess(x, data)
+    val_fn = lambda x: global_value(x, data)
+    xstar, _ = newton_run(jnp.zeros(20), grad_fn, hess_fn, 30)
+    return dict(data=data, grad=grad_fn, hess=hess_fn, val=val_fn,
+                xstar=xstar, fstar=float(val_fn(xstar)),
+                L=lipschitz_constants(data)["L"])
+
+
+def _gap(prob, x):
+    return float(prob["val"](x)) - prob["fstar"]
+
+
+def test_gd(prob):
+    x0 = jnp.ones(20)
+    final, _ = gd_run(x0, prob["grad"], 1.0 / prob["L"], 300)
+    assert _gap(prob, final) < 0.1 * _gap(prob, x0)
+
+
+def test_gd_ls_beats_gd(prob):
+    x0 = jnp.ones(20)
+    f1, _ = gd_run(x0, prob["grad"], 1.0 / prob["L"], 100)
+    f2, _ = gd_ls_run(x0, prob["val"], prob["grad"], 100)
+    assert _gap(prob, f2) <= _gap(prob, f1) * 1.05
+
+
+def test_diana(prob):
+    rd = RandomDithering(s=4)
+    om = rd.omega_for((20,))
+    alg = Diana(prob["grad"], rd, prob["L"], 8, om)
+    final, _ = alg.run(jnp.ones(20), 8, 500)
+    assert _gap(prob, final.x) < 0.05 * _gap(prob, jnp.ones(20))
+
+
+def test_adiana_converges(prob):
+    rd = RandomDithering(s=4)
+    om = rd.omega_for((20,))
+    alg = Adiana(prob["grad"], rd, prob["L"], 1e-3, 8, om)
+    final, _ = alg.run(jnp.ones(20), 8, 800)
+    assert _gap(prob, final.y) < 0.2 * _gap(prob, jnp.ones(20))
+
+
+def test_dingo_gradient_norm_decreases(prob):
+    alg = Dingo(prob["val"], prob["grad"], prob["hess"])
+    _, xs = alg.run(jnp.ones(20), 30)
+    g0 = float(jnp.linalg.norm(jnp.mean(prob["grad"](xs[0]), 0)))
+    gT = float(jnp.linalg.norm(jnp.mean(prob["grad"](xs[-1]), 0)))
+    assert gT < 0.1 * g0
+
+
+def test_nl1_local(prob):
+    x0 = prob["xstar"] + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (20,))
+    alg = NL1(prob["data"], k=3)
+    final, _ = alg.run(x0, 80)
+    assert _gap(prob, final.x) < 1e-6
+
+
+def test_dore_and_artemis(prob):
+    rd = RandomDithering(s=4)
+    om = rd.omega_for((20,))
+    dore = Dore(prob["grad"], rd, rd, prob["L"], 8, om, om)
+    f1, _ = dore.run(jnp.ones(20), 8, 500)
+    assert _gap(prob, f1.x) < 0.1 * _gap(prob, jnp.ones(20))
+
+    art = Artemis(prob["grad"], rd, prob["L"], 8, om, tau=4)
+    f2, _ = art.run(jnp.ones(20), 8, 500)
+    assert _gap(prob, f2.x) < 0.15 * _gap(prob, jnp.ones(20))
+
+
+def test_bits_per_round_ordering(prob):
+    """FedNL with Rank-1 moves O(d) floats; Newton moves O(d^2)."""
+    from repro.core import FedNL, Identity, RankR
+
+    d = 20
+    fednl = FedNL(prob["grad"], prob["hess"], RankR(1))
+    newton_like = FedNL(prob["grad"], prob["hess"], Identity())
+    assert fednl.bits_per_round(d) < newton_like.bits_per_round(d) / 5

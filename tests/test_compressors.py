@@ -1,0 +1,163 @@
+"""Property tests for the compression operators (Definitions 3.2 / 3.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compressors import (BlockTopK, Identity, NaturalSparsification,
+                                    PowerSGD, RandK, RandomDithering, RankR,
+                                    TopK, Zero, ab_constants, alpha_for)
+
+DIMS = st.integers(min_value=2, max_value=24)
+
+
+def _rand(seed, d0, d1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (d0, d1))
+
+
+def _check_contractive(comp, m, delta):
+    c = comp(m)
+    nm = float(jnp.linalg.norm(m))
+    nc = float(jnp.linalg.norm(c))
+    err = float(jnp.linalg.norm(c - m)) ** 2
+    assert nc <= nm * (1 + 1e-5), "||C(M)||_F <= ||M||_F violated"
+    assert err <= (1 - delta) * nm**2 + 1e-5 * nm**2, \
+        f"contraction violated: {err} > (1-{delta}) {nm**2}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), d=DIMS, kfrac=st.floats(0.05, 1.0))
+def test_topk_contractive(seed, d, kfrac):
+    m = _rand(seed, d, d)
+    k = max(1, int(kfrac * d * d))
+    comp = TopK(k=k)
+    _check_contractive(comp, m, comp.delta_for((d, d)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), d=DIMS, r=st.integers(1, 6))
+def test_rankr_contractive_symmetric(seed, d, r):
+    m = _rand(seed, d, d)
+    m = 0.5 * (m + m.T)  # FedNL compresses Hessian differences (symmetric)
+    comp = RankR(r=min(r, d))
+    _check_contractive(comp, m, comp.delta_for((d, d)))
+    # output is symmetric, as A.3.2 notes
+    c = comp(m)
+    np.testing.assert_allclose(c, c.T, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), d=DIMS, r=st.integers(1, 6))
+def test_rankr_contractive_general(seed, d, r):
+    m = _rand(seed, d, d)
+    comp = RankR(r=min(r, d), symmetric=False)
+    _check_contractive(comp, m, comp.delta_for((d, d)))
+
+
+def test_rankr_symmetric_matches_svd():
+    m = _rand(7, 12, 12)
+    m = 0.5 * (m + m.T)
+    a = RankR(r=3, symmetric=True)(m)
+    b = RankR(r=3, symmetric=False)(m)
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.integers(4, 20), r=st.integers(1, 3))
+def test_powersgd_contractive(seed, d, r):
+    m = _rand(seed, d, d)
+    comp = PowerSGD(r=r, iters=2)
+    # PowerSGD is rescaled to be in C(delta) for SOME delta >= 0;
+    # the first inequality must hold exactly, the second with delta = 0.
+    _check_contractive(comp, m, 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), kb=st.integers(1, 16))
+def test_block_topk_contractive(seed, kb):
+    m = _rand(seed, 8, 12)
+    comp = BlockTopK(k_per_block=kb, block=4)
+    _check_contractive(comp, m, comp.delta)
+
+
+def test_topk_keeps_largest():
+    m = jnp.asarray([[1.0, -5.0], [3.0, 0.5]])
+    out = TopK(k=2)(m)
+    np.testing.assert_allclose(out, [[0.0, -5.0], [3.0, 0.0]])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_randk_unbiased(seed):
+    d = 6
+    m = _rand(seed, d, d)
+    comp = RandK(k=9)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3000)
+    mean = jnp.mean(jax.vmap(lambda k: comp(m, k))(keys), axis=0)
+    np.testing.assert_allclose(mean, m, atol=0.25)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_randk_variance_bound(seed):
+    d = 6
+    m = _rand(seed, d, d)
+    comp = RandK(k=9)
+    omega = comp.omega_for((d, d))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 77), 2000)
+    errs = jax.vmap(lambda k: jnp.sum((comp(m, k) - m) ** 2))(keys)
+    assert float(jnp.mean(errs)) <= omega * float(jnp.sum(m**2)) * 1.1
+
+
+def test_dithering_unbiased():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32,))
+    comp = RandomDithering(s=4)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    mean = jnp.mean(jax.vmap(lambda k: comp(x, k))(keys), axis=0)
+    np.testing.assert_allclose(mean, x, atol=0.05)
+
+
+def test_bernoulli_unbiased():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    comp = NaturalSparsification(p=0.3)
+    keys = jax.random.split(jax.random.PRNGKey(1), 8000)
+    mean = jnp.mean(jax.vmap(lambda k: comp(x, k))(keys), axis=0)
+    np.testing.assert_allclose(mean, x, atol=0.25)  # ~5 sigma
+
+
+def test_identity_zero():
+    m = _rand(0, 5, 5)
+    np.testing.assert_allclose(Identity()(m), m)
+    np.testing.assert_allclose(Zero()(m), jnp.zeros_like(m))
+
+
+def test_alpha_rules():
+    d = 10
+    comp = TopK(k=20)
+    assert alpha_for(comp, (d, d), "one") == 1.0
+    a = alpha_for(comp, (d, d), "contract")
+    delta = comp.delta_for((d, d))
+    assert abs(a - (1 - (1 - delta) ** 0.5)) < 1e-12
+    rk = RandK(k=20)
+    au = alpha_for(rk, (d, d), "auto")
+    assert abs(au - 1.0 / (1 + rk.omega_for((d, d)))) < 1e-12
+
+
+def test_ab_constants_match_eq5():
+    d = 10
+    comp = TopK(k=20)
+    delta = comp.delta_for((d, d))
+    a, b = ab_constants(comp, (d, d), alpha=1.0)
+    assert abs(a - delta / 4) < 1e-12 and abs(b - (6 / delta - 3.5)) < 1e-12
+    a, b = ab_constants(comp, (d, d), alpha=1 - (1 - delta) ** 0.5)
+    al = 1 - (1 - delta) ** 0.5
+    assert abs(a - al**2) < 1e-12 and abs(b - al) < 1e-12
+
+
+def test_bits_accounting():
+    assert TopK(k=10).bits((8, 8)) == 10 * (64 + 32)
+    assert RankR(r=2).bits((8, 8)) == 2 * 64 * (1 + 16)
+    assert RandK(k=5).bits((8, 8)) == 5 * (64 + 32)
+    assert Zero().bits((8, 8)) == 0

@@ -1,0 +1,75 @@
+"""PSD projection (A.4) and the cubic subproblem solver (E.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.linalg import (frob_norm, project_psd, solve_cubic_subproblem,
+                               symmetrize)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 12),
+       mu=st.floats(0.0, 2.0))
+def test_project_psd_properties(seed, d, mu):
+    m = jax.random.normal(jax.random.PRNGKey(seed), (d, d))
+    p = project_psd(m, mu)
+    evals = np.linalg.eigvalsh(np.asarray(p))
+    assert evals.min() >= mu - 1e-4
+    np.testing.assert_allclose(p, p.T, atol=1e-5)
+
+
+def test_project_psd_is_projection():
+    # projecting an already-feasible matrix is (near) identity
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (6, 6))
+    m = symmetrize(a @ a.T) + 0.5 * jnp.eye(6)
+    np.testing.assert_allclose(project_psd(m, 0.1), m, atol=1e-4)
+
+
+def test_project_psd_closest_point():
+    # the projection minimizes Frobenius distance among feasible points
+    key = jax.random.PRNGKey(1)
+    m = symmetrize(jax.random.normal(key, (5, 5)))
+    p = project_psd(m, 0.0)
+    d0 = float(frob_norm(p - m))
+    for seed in range(5):
+        q = jax.random.normal(jax.random.PRNGKey(seed + 2), (5, 5))
+        feas = symmetrize(q @ q.T)  # arbitrary PSD point
+        assert float(frob_norm(feas - m)) >= d0 - 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 10),
+       mcube=st.floats(0.1, 10.0))
+def test_cubic_subproblem_stationarity(seed, d, mcube):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.normal(k1, (d,))
+    a = jax.random.normal(k2, (d, d))
+    h_mat = symmetrize(a)  # possibly indefinite
+    h = solve_cubic_subproblem(g, h_mat, mcube)
+    # stationarity: g + (H + M/2 ||h|| I) h = 0  (bisection solver; the
+    # Moré–Sorensen "hard case" is only approximated — see linalg.py)
+    resid = g + h_mat @ h + 0.5 * mcube * jnp.linalg.norm(h) * h
+    assert float(jnp.linalg.norm(resid)) <= 1e-2 * (1.0 + float(jnp.linalg.norm(g)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_cubic_subproblem_is_minimum(seed):
+    d = 6
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = jax.random.normal(k1, (d,))
+    h_mat = symmetrize(jax.random.normal(k2, (d, d)))
+    m = 2.0
+
+    def t_val(h):
+        return float(g @ h + 0.5 * h @ h_mat @ h
+                     + m / 6 * jnp.linalg.norm(h) ** 3)
+
+    h_star = solve_cubic_subproblem(g, h_mat, m)
+    v_star = t_val(h_star)
+    for i in range(20):
+        pert = 0.1 * jax.random.normal(jax.random.fold_in(k3, i), (d,))
+        assert t_val(h_star + pert) >= v_star - 1e-4
