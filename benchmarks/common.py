@@ -11,37 +11,12 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.newton import newton_run
-from repro.core.objectives import (batch_grad, batch_hess, global_value,
-                                   lipschitz_constants)
-from repro.data.synthetic import make_libsvm_like, make_synthetic
+from repro.data.problems import make_problem as problem  # noqa: F401
+from repro.engine import records
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
-
-
-def problem(name="a1a", lam=1e-3, seed=0):
-    """Returns dict with oracles, x*, constants. 'a1a' etc. use Table 3
-    shapes; 'synthetic' uses the Sec. A.14 generator."""
-    key = jax.random.PRNGKey(seed)
-    if name.startswith("synthetic"):
-        _, alpha, beta = name.split(":")
-        data = make_synthetic(key, float(alpha), float(beta), n=30, m=200,
-                              d=100, lam=lam)
-    else:
-        data = make_libsvm_like(key, name, lam=lam)
-    grad_fn = lambda x: batch_grad(x, data)
-    hess_fn = lambda x: batch_hess(x, data)
-    val_fn = lambda x: global_value(x, data)
-    d = data.a.shape[-1]
-    xstar, _ = newton_run(jnp.zeros(d), grad_fn, hess_fn, 25)
-    return dict(
-        data=data, grad=grad_fn, hess=hess_fn, val=val_fn, xstar=xstar,
-        fstar=float(val_fn(xstar)), d=d, n=data.a.shape[0],
-        consts=lipschitz_constants(data),
-    )
 
 
 def gaps(prob, xs):
@@ -49,16 +24,14 @@ def gaps(prob, xs):
 
 
 def bits_to_accuracy(gap_curve, bits_per_round, target=1e-9, init_bits=0.0):
-    """Paper x-axis: communicated bits per node until gap <= target."""
-    idx = np.nonzero(gap_curve <= target)[0]
-    if len(idx) == 0:
-        return float("inf")
-    return float(init_bits + idx[0] * bits_per_round)
+    """Paper x-axis: communicated bits per node until gap <= target.
+    Per-round-rate variant of ``repro.engine.records.bits_to_accuracy``."""
+    bits = init_bits + bits_per_round * np.arange(len(gap_curve))
+    return records.bits_to_accuracy(gap_curve, bits, target)
 
 
 def rounds_to_accuracy(gap_curve, target=1e-9):
-    idx = np.nonzero(gap_curve <= target)[0]
-    return int(idx[0]) if len(idx) else -1
+    return records.rounds_to_accuracy(gap_curve, target)
 
 
 def timed(fn, *args, **kw):

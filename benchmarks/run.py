@@ -1,7 +1,11 @@
 """Benchmark harness — one function per paper figure/table.
 
+FedNL-family cells are declarative ``ExperimentSpec`` grids executed by
+``repro.engine.Sweep`` (one vmapped+scanned jitted program per cell);
+first-order and inexact-Newton baselines keep their bespoke drivers.
 Prints ``name,us_per_call,derived`` CSV to stdout (derived = the claim
-check for that artifact) and writes full curves to benchmarks/out/*.csv.
+check for that artifact) and writes full curves to benchmarks/out/*.csv
+with a ``us_per_round`` column per cell.
 
   fig2_local        FedNL & N0 vs GD/DIANA/ADIANA/DINGO, bits to 1e-6
   fig2_global       FedNL-LS/N0-LS/FedNL-CR vs first-order, from far
@@ -13,6 +17,7 @@ check for that artifact) and writes full curves to benchmarks/out/*.csv.
   fig9_pp           FedNL-PP tau sweep + vs Artemis
   fig14_heterogeneity  synthetic(alpha, beta) sweep
   table2_rates      Thm 3.6 / NS / N0 rate checks
+  engine_vmap       multi-seed vmap speedup vs serial per-seed loops
   roofline          (arch x shape) table from the dry-run JSONL
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
@@ -38,14 +43,14 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (bits_to_accuracy, gaps, problem,
-                               rounds_to_accuracy, write_csv)
-from repro.core import (FedNL, FedNLBC, FedNLCR, FedNLLS, FedNLPP, Identity,
-                        PowerSGD, RandK, RandomDithering, RankR, TopK, Zero)
+from benchmarks.common import bits_to_accuracy, gaps, problem, write_csv
+from repro.core import FedNL, RandK, RandomDithering, RankR, TopK
 from repro.core.baselines import (Adiana, Artemis, Diana, Dingo, Dore, NL1,
                                   gd_ls_run, gd_run)
 from repro.core.compressors import FLOAT_BITS
-from repro.core.newton import fixed_hessian_run, n0_ls_run
+from repro.engine import ExperimentSpec, Sweep
+from repro.engine import bits_to_accuracy as bits_at
+from repro.engine import rounds_to_accuracy as rounds_at
 
 RESULTS = []
 TARGET = 1e-12
@@ -69,6 +74,13 @@ def _run(alg_run, *args, **kw):
     return out, (time.time() - t0) * 1e6
 
 
+def _sweep(prob, specs, x0):
+    """Run an ExperimentSpec grid; returns (SweepResult, total wall us)."""
+    res = Sweep(specs).run(prob, x0=x0)
+    us = sum(c.us_per_round * c.spec.num_rounds for c in res.cells)
+    return res, us
+
+
 # ---------------------------------------------------------------------------
 
 
@@ -77,20 +89,17 @@ def fig2_local(fast=False):
     d, n = prob["d"], prob["n"]
     x0 = _near_x0(prob)
     rounds = 60 if fast else 150
-    rows = []
 
-    fednl = FedNL(prob["grad"], prob["hess"], RankR(1), option=1, mu=1e-3)
-    (final, xs), us = _run(fednl.run, x0, n, 25)
-    g = gaps(prob, xs)
-    b_fednl = bits_to_accuracy(g, fednl.bits_per_round(d), TARGET,
-                               fednl.init_bits(d))
-    rows += [("FedNL-Rank1", k * fednl.bits_per_round(d) + fednl.init_bits(d),
-              float(v)) for k, v in enumerate(g)]
-
-    h0 = jnp.mean(prob["hess"](x0), axis=0)
-    (_, xs_n0), _ = _run(fixed_hessian_run, x0, h0, prob["grad"], 40)
-    g_n0 = gaps(prob, xs_n0)
-    b_n0 = bits_to_accuracy(g_n0, d * FLOAT_BITS, TARGET, fednl.init_bits(d))
+    res, us = _sweep(prob, [
+        ExperimentSpec("fednl", "rankr", 1, params=dict(option=1, mu=1e-3),
+                       num_rounds=25, name="FedNL-Rank1"),
+        ExperimentSpec("n0", num_rounds=40, name="N0"),
+    ], x0)
+    cf, c0 = res.cells
+    b_fednl = bits_at(cf.gaps[0], cf.bits, TARGET)
+    b_n0 = bits_at(c0.gaps[0], c0.bits, TARGET)
+    rows = [("FedNL-Rank1", float(b), float(g))
+            for b, g in zip(cf.bits, cf.gaps[0])]
 
     (_, xs_gd), _ = _run(gd_run, x0, prob["grad"], 1.0 / prob["consts"]["L"],
                          rounds * 40)
@@ -128,21 +137,21 @@ def fig2_global(fast=False):
     x0 = jnp.ones(d) * 2.0
     rounds = 40 if fast else 80
 
-    ls = FedNLLS(prob["val"], prob["grad"], prob["hess"], RankR(1), mu=1e-3)
-    (_, xs_ls), us = _run(ls.run, x0, n, rounds)
-    b_ls = bits_to_accuracy(gaps(prob, xs_ls), ls.bits_per_round(d), TARGET,
-                            d * (d + 1) // 2 * FLOAT_BITS)
-
-    h0 = jnp.mean(prob["hess"](x0), axis=0)
-    (_, xs_n0ls), _ = _run(n0_ls_run, x0, h0, prob["val"], prob["grad"],
-                           rounds, 1e-3)
-    b_n0ls = bits_to_accuracy(gaps(prob, xs_n0ls), d * FLOAT_BITS, TARGET,
-                              d * (d + 1) // 2 * FLOAT_BITS)
-
-    cr = FedNLCR(prob["grad"], prob["hess"], RankR(1),
-                 l_star=prob["consts"]["L_star"])
-    (_, xs_cr), _ = _run(cr.run, x0, n, rounds * 4)
-    b_cr = bits_to_accuracy(gaps(prob, xs_cr), cr.bits_per_round(d), TARGET)
+    res, us = _sweep(prob, [
+        ExperimentSpec("fednl-ls", "rankr", 1, params=dict(mu=1e-3),
+                       num_rounds=rounds, name="FedNL-LS"),
+        ExperimentSpec("n0-ls", params=dict(mu=1e-3), num_rounds=rounds,
+                       name="N0-LS"),
+        ExperimentSpec("fednl-cr", "rankr", 1,
+                       params=dict(l_star=prob["consts"]["L_star"]),
+                       num_rounds=rounds * 4, name="FedNL-CR"),
+    ], x0)
+    b_ls = bits_at(res.cell("FedNL-LS").gaps[0], res.cell("FedNL-LS").bits,
+                   TARGET)
+    b_n0ls = bits_at(res.cell("N0-LS").gaps[0], res.cell("N0-LS").bits,
+                     TARGET)
+    b_cr = bits_at(res.cell("FedNL-CR").gaps[0], res.cell("FedNL-CR").bits,
+                   TARGET)
 
     (_, xs_gd), _ = _run(gd_run, x0, prob["grad"], 1.0 / prob["consts"]["L"],
                          rounds * 20)
@@ -171,19 +180,16 @@ def fig2_nl1(fast=False):
     # start far enough that the Hessian-learning transient matters (NL1
     # must re-learn m coefficients per silo at K=1/round)
     x0 = _near_x0(prob, scale=0.3)
-    compressors = {
-        "Rank1": RankR(1),
-        f"Top{d}": TopK(k=d),
-        "PowerSGD1": PowerSGD(r=1, iters=2),
-    }
-    bits = {}
-    us = 0.0
-    for name, comp in compressors.items():
-        alg = FedNL(prob["grad"], prob["hess"], comp, option=1, mu=1e-3)
-        (_, xs), u = _run(alg.run, x0, n, 40)
-        us += u
-        bits[name] = bits_to_accuracy(gaps(prob, xs), alg.bits_per_round(d),
-                                      TARGET, alg.init_bits(d))
+    res, us = _sweep(prob, [
+        ExperimentSpec("fednl", "rankr", 1, params=dict(option=1, mu=1e-3),
+                       num_rounds=40, name="Rank1"),
+        ExperimentSpec("fednl", "topk", d, params=dict(option=1, mu=1e-3),
+                       num_rounds=40, name=f"Top{d}"),
+        ExperimentSpec("fednl", "powersgd", 1, params=dict(option=1, mu=1e-3),
+                       num_rounds=40, name="PowerSGD1"),
+    ], x0)
+    bits = {c.spec.label: bits_at(c.gaps[0], c.bits, TARGET)
+            for c in res.cells}
     nl1 = NL1(prob["data"], k=1)
     (_, xs), _ = _run(nl1.run, x0, 400 if not fast else 150)
     bits["NL1-Rand1"] = bits_to_accuracy(gaps(prob, xs),
@@ -201,25 +207,22 @@ def fig3_compression(fast=False):
     prob = problem("phishing")
     d, n = prob["d"], prob["n"]
     x0 = _near_x0(prob)
-    rows = []
-    us = 0.0
-    verdicts = []
-    for fam, levels in [("RankR", [1, 2, 4]),
-                        ("TopK", [d, 4 * d, 16 * d]),
-                        ("PowerSGD", [1, 2, 4])]:
-        bl = {}
-        for lvl in levels:
-            comp = {"RankR": lambda l: RankR(l),
-                    "TopK": lambda l: TopK(k=l),
-                    "PowerSGD": lambda l: PowerSGD(r=l, iters=2)}[fam](lvl)
-            alg = FedNL(prob["grad"], prob["hess"], comp, option=1, mu=1e-3)
-            (_, xs), u = _run(alg.run, x0, n, 40)
-            us += u
-            bl[lvl] = bits_to_accuracy(gaps(prob, xs), alg.bits_per_round(d),
-                                       TARGET, alg.init_bits(d))
-            rows.append((fam, lvl, bl[lvl]))
+    grid = [("rankr", [1, 2, 4]), ("topk", [d, 4 * d, 16 * d]),
+            ("powersgd", [1, 2, 4])]
+    specs = [ExperimentSpec("fednl", fam, lvl,
+                            params=dict(option=1, mu=1e-3), num_rounds=40)
+             for fam, levels in grid for lvl in levels]
+    res, us = _sweep(prob, specs, x0)
+    rows, verdicts = [], []
+    by = {(c.spec.compressor, c.spec.level): c for c in res.cells}
+    for fam, levels in grid:
+        bl = {lvl: bits_at(by[(fam, lvl)].gaps[0], by[(fam, lvl)].bits,
+                           TARGET) for lvl in levels}
+        rows += [(fam, lvl, bl[lvl], by[(fam, lvl)].us_per_round)
+                 for lvl in levels]
         verdicts.append(bl[levels[0]] <= bl[levels[-1]])
-    write_csv("fig3_compression", ["family", "level", "bits"], rows)
+    write_csv("fig3_compression", ["family", "level", "bits", "us_per_round"],
+              rows)
     report("fig3_compression", us,
            f"rows={len(rows)}|claim_smaller_level_better={all(verdicts)}")
 
@@ -228,14 +231,14 @@ def fig4_options(fast=False):
     prob = problem("a1a")
     d, n = prob["d"], prob["n"]
     x0 = _near_x0(prob)
-    out = {}
-    us = 0.0
-    for opt in (1, 2):
-        alg = FedNL(prob["grad"], prob["hess"], RankR(1), option=opt, mu=1e-3)
-        (_, xs), u = _run(alg.run, x0, n, 120)
-        us += u
-        out[opt] = bits_to_accuracy(gaps(prob, xs), alg.bits_per_round(d),
-                                    TARGET, alg.init_bits(d))
+    res, us = _sweep(prob, [
+        ExperimentSpec("fednl", "rankr", 1, params=dict(option=opt, mu=1e-3),
+                       num_rounds=120, name=f"opt{opt}")
+        for opt in (1, 2)
+    ], x0)
+    out = {opt: bits_at(res.cell(f"opt{opt}").gaps[0],
+                        res.cell(f"opt{opt}").bits, TARGET)
+           for opt in (1, 2)}
     report("fig4_options", us,
            f"opt1={out[1]:.2e}|opt2={out[2]:.2e}|"
            f"claim_opt1_not_worse={out[1] <= out[2] * 1.01}")
@@ -246,27 +249,27 @@ def fig6_update_rules(fast=False):
     d, n = prob["d"], prob["n"]
     x0 = _near_x0(prob, scale=0.3)
     k = d // 2
-    topk = TopK(k=k)
-    delta = topk.delta_for((d, d))
-    randk = RandK(k=k)
-    omega = randk.omega_for((d, d))
-    rules = {
-        "topk_a1": (topk, 1.0),
-        "topk_contract": (topk, 1.0 - (1.0 - delta) ** 0.5),
-        "randk_unbiased": (randk, 1.0 / (1.0 + omega)),
-    }
-    rounds_out = {}
-    us = 0.0
-    for name, (comp, alpha) in rules.items():
-        alg = FedNL(prob["grad"], prob["hess"], comp, alpha=alpha, option=1,
-                    mu=1e-3)
-        (_, xs), u = _run(alg.run, x0, n, 150)
-        us += u
-        rounds_out[name] = rounds_to_accuracy(gaps(prob, xs), TARGET)
-    ok = {k: (v if v >= 0 else 10**9) for k, v in rounds_out.items()}
+    delta = TopK(k=k).delta_for((d, d))
+    omega = RandK(k=k).omega_for((d, d))
+    res, us = _sweep(prob, [
+        ExperimentSpec("fednl", "topk", k,
+                       params=dict(alpha=1.0, option=1, mu=1e-3),
+                       num_rounds=150, name="topk_a1"),
+        ExperimentSpec("fednl", "topk", k,
+                       params=dict(alpha=1.0 - (1.0 - delta) ** 0.5,
+                                   option=1, mu=1e-3),
+                       num_rounds=150, name="topk_contract"),
+        ExperimentSpec("fednl", "randk", k,
+                       params=dict(alpha=1.0 / (1.0 + omega),
+                                   option=1, mu=1e-3),
+                       num_rounds=150, name="randk_unbiased"),
+    ], x0)
+    rounds_out = {c.spec.label: rounds_at(c.gaps[0], TARGET)
+                  for c in res.cells}
+    ok = {k_: (v if v >= 0 else 10**9) for k_, v in rounds_out.items()}
     claim = ok["topk_a1"] <= min(ok.values())
     report("fig6_update_rules", us,
-           "|".join(f"{k}={v}" for k, v in rounds_out.items())
+           "|".join(f"{k_}={v}" for k_, v in rounds_out.items())
            + f"|claim_topk_a1_best={claim}")
 
 
@@ -274,16 +277,17 @@ def fig7_bc(fast=False):
     prob = problem("phishing")
     d, n = prob["d"], prob["n"]
     x0 = _near_x0(prob)
-    us = 0.0
-    bits = {}
-    for p in ([0.9, 0.6] if fast else [1.0, 0.9, 0.6, 0.5]):
-        k = max(1, int(p * d))
-        alg = FedNLBC(prob["grad"], prob["hess"], TopK(k=k), TopK(k=k),
-                      p=p, option=1, mu=1e-3)
-        (_, zs), u = _run(alg.run, x0, n, 600)
-        us += u
-        up, down = alg.bits_per_round(d)
-        bits[f"p={p}"] = bits_to_accuracy(gaps(prob, zs), up + down, TARGET)
+    ps = [0.9, 0.6] if fast else [1.0, 0.9, 0.6, 0.5]
+    res, us = _sweep(prob, [
+        ExperimentSpec("fednl-bc", "topk", max(1, int(p * d)),
+                       params=dict(model_compressor=("topk",
+                                                     max(1, int(p * d))),
+                                   p=p, option=1, mu=1e-3),
+                       num_rounds=600, name=f"p={p}")
+        for p in ps
+    ], x0)
+    bits = {c.spec.label: bits_at(c.gaps[0], c.bits, TARGET)
+            for c in res.cells}
     rd = RandomDithering(s=int(d ** 0.5))
     om = rd.omega_for((d,))
     dore = Dore(prob["grad"], rd, rd, prob["consts"]["L"], n, om, om)
@@ -300,14 +304,14 @@ def fig9_pp(fast=False):
     prob = problem("a1a")
     d, n = prob["d"], prob["n"]
     x0 = _near_x0(prob)
-    us = 0.0
-    rounds_out = {}
     taus = [max(1, int(0.2 * n)), max(1, int(0.5 * n)), n]
-    for tau in taus:
-        alg = FedNLPP(prob["grad"], prob["hess"], RankR(1), tau=tau)
-        (_, xs), u = _run(alg.run, x0, n, 200)
-        us += u
-        rounds_out[tau] = rounds_to_accuracy(gaps(prob, xs), TARGET)
+    res, us = _sweep(prob, [
+        ExperimentSpec("fednl-pp", "rankr", 1, params=dict(tau=tau),
+                       num_rounds=200, name=f"tau={tau}")
+        for tau in taus
+    ], x0)
+    rounds_out = {tau: rounds_at(res.cell(f"tau={tau}").gaps[0], TARGET)
+                  for tau in taus}
     mono = rounds_out[taus[0]] >= rounds_out[taus[-1]] >= 0
 
     rd = RandomDithering(s=int(d ** 0.5))
@@ -315,11 +319,9 @@ def fig9_pp(fast=False):
     art = Artemis(prob["grad"], rd, prob["consts"]["L"], n, om,
                   tau=max(1, int(0.5 * n)))
     (_, xs), _ = _run(art.run, x0, n, 3000 if not fast else 800)
-    pp = FedNLPP(prob["grad"], prob["hess"], RankR(1),
-                 tau=max(1, int(0.5 * n)))
-    (_, xs_pp), _ = _run(pp.run, x0, n, 200)
+    pp_cell = res.cell(f"tau={max(1, int(0.5 * n))}")
     b_art = bits_to_accuracy(gaps(prob, xs), art.bits_per_round(d), TARGET)
-    b_pp = bits_to_accuracy(gaps(prob, xs_pp), pp.bits_per_round(d), TARGET)
+    b_pp = bits_at(pp_cell.gaps[0], pp_cell.bits, TARGET)
     report("fig9_pp", us,
            "|".join(f"tau={k}:rounds={v}" for k, v in rounds_out.items())
            + f"|mono_in_tau={mono}|bits_pp={b_pp:.2e}|bits_artemis={b_art:.2e}"
@@ -334,17 +336,18 @@ def fig14_heterogeneity(fast=False):
         prob = problem(f"synthetic:{ab[0]}:{ab[1]}")
         d, n = prob["d"], prob["n"]
         x0 = _near_x0(prob)
-        alg = FedNL(prob["grad"], prob["hess"], RankR(1), option=2)
-        (_, xs), u = _run(alg.run, x0, n, 30)
+        res, u = _sweep(prob, [
+            ExperimentSpec("fednl", "rankr", 1, params=dict(option=2),
+                           num_rounds=30, name="FedNL"),
+        ], x0)
         us += u
-        b_f = bits_to_accuracy(gaps(prob, xs), alg.bits_per_round(d), TARGET,
-                               alg.init_bits(d))
+        cell = res.cells[0]
+        b_f = bits_at(cell.gaps[0], cell.bits, TARGET)
         (_, xs_gd), _ = _run(gd_run, x0, prob["grad"],
                              1.0 / prob["consts"]["L"], 1500 if fast else 4000)
         b_g = bits_to_accuracy(gaps(prob, xs_gd), d * FLOAT_BITS, TARGET)
         out[tag] = (b_f, b_g)
     # FedNL stays put; GD degrades (or at least never closes the gap)
-    adv = {k: v[1] / v[0] for k, v in out.items()}
     claim = all(v[0] < v[1] for v in out.values())
     report("fig14_heterogeneity", us,
            "|".join(f"{k}:fednl={v[0]:.2e},gd={v[1]:.2e}"
@@ -374,6 +377,8 @@ def table2_rates(fast=False):
     checks["fednl_superlinear"] = (len(ratios) >= 3
                                    and ratios[-1] < ratios[0] * 0.5)
 
+    from repro.core.newton import fixed_hessian_run
+
     hstar = jnp.mean(prob["hess"](prob["xstar"]), axis=0)
     (_, xs_ns), _ = _run(fixed_hessian_run, x0, hstar, prob["grad"], 6)
     rr = np.linalg.norm(np.asarray(xs_ns) - np.asarray(prob["xstar"]), axis=-1)
@@ -389,6 +394,38 @@ def table2_rates(fast=False):
     report("table2_rates", us,
            "|".join(f"{k}={v}" for k, v in checks.items())
            + f"|all={all(checks.values())}")
+
+
+def engine_vmap(fast=False):
+    """The engine's headline: an s-seed cell as ONE vmapped jitted program
+    vs s serial per-seed runs (the seed-era execution model)."""
+    prob = problem("phishing")
+    d, n = prob["d"], prob["n"]
+    x0 = _near_x0(prob)
+    seeds = (0, 1, 2) if fast else (0, 1, 2, 3)
+    rounds = 40
+
+    t0 = time.time()
+    alg = FedNL(prob["grad"], prob["hess"], RankR(1), option=1, mu=1e-3)
+    serial = [alg.run(x0, n, rounds, seed=s)[1] for s in seeds]
+    jax.block_until_ready(serial[-1])
+    us_serial = (time.time() - t0) * 1e6
+
+    spec = ExperimentSpec("fednl", "rankr", 1,
+                          params=dict(option=1, mu=1e-3),
+                          seeds=seeds, num_rounds=rounds)
+    t0 = time.time()
+    res = Sweep([spec]).run(prob, x0=x0)
+    us_vmap = (time.time() - t0) * 1e6
+
+    cell = res.cells[0]
+    err = max(float(np.max(np.abs(cell.xs[i] - np.asarray(serial[i]))))
+              for i in range(len(seeds)))
+    speedup = us_serial / max(us_vmap, 1.0)
+    report("engine_vmap", us_vmap,
+           f"seeds={len(seeds)}|us_serial={us_serial:.0f}|us_vmap={us_vmap:.0f}"
+           f"|speedup={speedup:.2f}x|max_abs_diff={err:.2e}"
+           f"|claim_speedup_ge_3x={speedup >= 3.0}")
 
 
 def roofline(fast=False):
@@ -416,7 +453,7 @@ def roofline(fast=False):
 
 BENCHES = [fig2_local, fig2_global, fig2_nl1, fig3_compression, fig4_options,
            fig6_update_rules, fig7_bc, fig9_pp, fig14_heterogeneity,
-           table2_rates, roofline]
+           table2_rates, engine_vmap, roofline]
 
 
 def main() -> None:

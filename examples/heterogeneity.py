@@ -1,5 +1,6 @@
 """Fig. 14 scenario: how statistical heterogeneity (synthetic(alpha, beta))
-affects FedNL vs gradient descent.
+affects FedNL vs gradient descent — FedNL cells run as declarative
+engine sweeps (3 seeds stacked into one vmapped program per problem).
 
     PYTHONPATH=src python examples/heterogeneity.py
 """
@@ -12,13 +13,17 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import FedNL, RankR
 from repro.core.baselines import gd_run
 from repro.core.newton import newton_run
 from repro.core.objectives import (batch_grad, batch_hess, global_value,
                                    lipschitz_constants)
 from repro.data.synthetic import make_iid, make_synthetic
+from repro.engine import ExperimentSpec, Sweep
+
+SPEC = ExperimentSpec("fednl", "rankr", 1, params=dict(option=2),
+                      seeds=(0, 1, 2), num_rounds=15, name="FedNL")
 
 for tag, maker in [
     ("IID", lambda k: make_iid(k, n=30, m=200, d=100)),
@@ -29,16 +34,19 @@ for tag, maker in [
     grad_fn = lambda x: batch_grad(x, data)
     hess_fn = lambda x: batch_hess(x, data)
     val_fn = lambda x: global_value(x, data)
-    d = data.a.shape[-1]
+    d, n = data.a.shape[-1], data.a.shape[0]
     xstar, _ = newton_run(jnp.zeros(d), grad_fn, hess_fn, 25)
     fstar = float(val_fn(xstar))
     x0 = xstar + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (d,))
 
-    alg = FedNL(grad_fn, hess_fn, RankR(1), option=2)
-    _, xs = alg.run(x0, data.a.shape[0], 15)
+    prob = dict(grad=grad_fn, hess=hess_fn, val=val_fn, n=n, d=d, fstar=fstar)
+    res = Sweep([SPEC]).run(prob, x0=x0)
+    cell = res.cells[0]
+    gap_fednl = float(np.max(cell.gaps[:, -1]))  # worst of the 3 seeds
+
     _, xs_gd = gd_run(x0, grad_fn, 1.0 / lipschitz_constants(data)["L"], 1500)
 
-    print(f"{tag:16s} FedNL gap@15 rounds: {float(val_fn(xs[-1])) - fstar:9.2e}"
+    print(f"{tag:16s} FedNL gap@15 rounds (worst of 3 seeds): {gap_fednl:9.2e}"
           f"   GD gap@1500 rounds: {float(val_fn(xs_gd[-1])) - fstar:9.2e}")
 print("\nFedNL is insensitive to heterogeneity; GD's tail is kappa-limited "
       "regardless (the paper's Fig. 14 story).")

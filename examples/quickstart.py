@@ -1,4 +1,5 @@
-"""Quickstart: FedNL (Algorithm 1) on a federated logistic regression.
+"""Quickstart: FedNL (Algorithm 1) on a federated logistic regression,
+constructed declaratively through the experiment engine's registry.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,21 +10,26 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core import FedNL, RankR
 from repro.core.objectives import batch_grad, batch_hess, global_value
 from repro.data.synthetic import make_synthetic
+from repro.engine import Oracles, available_methods, build_compressor, make_method
 
 # 1. a cross-silo problem: n=16 silos, heterogeneous data (Sec. A.14)
 data = make_synthetic(jax.random.PRNGKey(0), alpha=0.5, beta=0.5,
                       n=16, m=100, d=60, lam=1e-3)
-grad_fn = lambda x: batch_grad(x, data)   # x -> (n, d) per-silo gradients
-hess_fn = lambda x: batch_hess(x, data)   # x -> (n, d, d) per-silo Hessians
+oracles = Oracles(
+    value=lambda x: global_value(x, data),  # x -> f(x)
+    grad=lambda x: batch_grad(x, data),     # x -> (n, d) per-silo gradients
+    hess=lambda x: batch_hess(x, data),     # x -> (n, d, d) per-silo Hessians
+)
 
-# 2. FedNL with Rank-1 compression (the paper's best configuration)
-alg = FedNL(grad_fn, hess_fn, compressor=RankR(1), alpha=1.0,
-            option=1, mu=1e-3)
+# 2. any method in the family is constructible by name; FedNL with Rank-1
+#    compression is the paper's best configuration
+print("registered methods:", ", ".join(available_methods()))
+alg = make_method("fednl", oracles, build_compressor("rankr", 1),
+                  alpha=1.0, option=1, mu=1e-3)
 
-# 3. run 20 communication rounds
+# 3. run 20 communication rounds (the scan driver comes with the method)
 x0 = jnp.zeros(60)
 final, xs = alg.run(x0, n=16, num_rounds=20)
 

@@ -30,12 +30,13 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..engine.method import MethodBase, Oracles, register
 from .compressors import Compressor, FLOAT_BITS
 from .fednl import FedNLState
 from .linalg import frob_norm, solve_newton_system
 
 
-class StochasticFedNL:
+class StochasticFedNL(MethodBase):
     """FedNL (Option 2) with stochastic local Hessian oracles.
 
     hess_fn(x, key) -> (n, d, d) subsampled local Hessians;
@@ -52,7 +53,9 @@ class StochasticFedNL:
         self.comp = compressor
         self.alpha = alpha
 
-    def init(self, x0, n, key) -> FedNLState:
+    def init(self, x0, n, key=None, seed: int = 0) -> FedNLState:
+        if key is None:
+            key = jax.random.PRNGKey(seed)
         h0 = self.hess_fn(x0, key)
         return FedNLState(x=x0, h_local=h0, h_global=jnp.mean(h0, axis=0),
                           key=key, step=jnp.zeros((), jnp.int32))
@@ -81,15 +84,9 @@ class StochasticFedNL:
             key=key, step=state.step + 1,
         )
 
-    def run(self, x0, n, num_rounds, seed: int = 0):
-        state = self.init(x0, n, jax.random.PRNGKey(seed))
-
-        def body(state, _):
-            new = self.step(state)
-            return new, new.x
-
-        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
-        return final, jnp.concatenate([x0[None], xs], axis=0)
+    def bits_per_round(self, d: int) -> int:
+        """Uplink per device: gradient + S_i + l_i (as FedNL Option 2)."""
+        return d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
 
 
 class FedNLPPBCState(NamedTuple):
@@ -106,7 +103,7 @@ class FedNLPPBCState(NamedTuple):
     step: jax.Array
 
 
-class FedNLPPBC:
+class FedNLPPBC(MethodBase):
     """Master method: FedNL-PP x FedNL-BC (beyond paper).
 
     Round structure:
@@ -120,6 +117,9 @@ class FedNLPPBC:
               uplink: compressed Hessian diff + (l, g) diffs
       server aggregates diffs (Alg 2 lines 18-20).
     """
+
+    traj_field = "z"
+    silo_fields = ("w", "h_local", "l_local", "g_local")
 
     def __init__(self, grad_fn, hess_fn, compressor: Compressor,
                  model_compressor: Compressor, tau: int,
@@ -194,12 +194,16 @@ class FedNLPPBC:
         down = self.comp_m.bits((d,))
         return up, down
 
-    def run(self, x0, n, num_rounds, seed: int = 0):
-        state = self.init(x0, n, seed=seed)
 
-        def body(state, _):
-            new = self.step(state)
-            return new, new.z
+@register("fednl-stoch")
+def _make_fednl_stoch(oracles: Oracles, compressor, hess_fn_stoch=None,
+                      **params):
+    if hess_fn_stoch is None:  # degenerate: exact Hessians, key ignored
+        hess_fn_stoch = lambda x, key: oracles.hess(x)
+    return StochasticFedNL(oracles.grad, hess_fn_stoch, compressor, **params)
 
-        final, zs = jax.lax.scan(body, state, None, length=num_rounds)
-        return final, jnp.concatenate([x0[None], zs], axis=0)
+
+@register("fednl-ppbc")
+def _make_fednl_ppbc(oracles: Oracles, compressor, model_compressor, **params):
+    return FedNLPPBC(oracles.grad, oracles.hess, compressor, model_compressor,
+                     **params)

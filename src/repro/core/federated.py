@@ -28,6 +28,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.6 exports shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from .compressors import Compressor
 from .fednl import FedNL, FedNLState
 from .objectives import LogRegData, silo_grad, silo_hess
@@ -50,7 +55,7 @@ def run_fednl_sharded(data: LogRegData, compressor: Compressor, mesh: Mesh,
     state_specs = FedNLState(x=P(), h_local=P(axis), h_global=P(), key=P(),
                              step=P())
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(_shard_map, mesh=mesh,
              in_specs=(state_specs, P(axis), P(axis)),
              out_specs=state_specs)
     def sharded_step(state: FedNLState, a, b) -> FedNLState:

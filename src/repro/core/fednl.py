@@ -28,6 +28,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..engine.method import MethodBase, Oracles, register
 from .compressors import Compressor
 from .linalg import frob_norm, project_psd, solve_newton_system
 
@@ -40,7 +41,7 @@ class FedNLState(NamedTuple):
     step: jax.Array     # iteration counter
 
 
-class FedNL:
+class FedNL(MethodBase):
     """Vanilla FedNL. ``option`` in {1, 2}; ``mu`` needed for Option 1.
 
     grad_fn:  x -> (n, d) stacked per-silo gradients
@@ -140,18 +141,10 @@ class FedNL:
 
         return d * (d + 1) // 2 * FLOAT_BITS  # symmetric matrix
 
-    # -- driver -----------------------------------------------------------------
+    # The round loop (``run``) comes from MethodBase: lax.scan of ``step``
+    # recording ``x``, with x0 prepended.
 
-    def run(self, x0: jax.Array, n: int, num_rounds: int,
-            h0: Optional[jax.Array] = None, seed: int = 0) -> tuple[FedNLState, jax.Array]:
-        """Run num_rounds; returns (final state, (num_rounds+1, d) iterate history)."""
-        state = self.init(x0, n, h0=h0, seed=seed)
-        step = jax.jit(self.step)
 
-        def body(state, _):
-            new = step(state)
-            return new, new.x
-
-        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
-        xs = jnp.concatenate([x0[None], xs], axis=0)
-        return final, xs
+@register("fednl")
+def _make_fednl(oracles: Oracles, compressor, **params):
+    return FedNL(oracles.grad, oracles.hess, compressor, **params)

@@ -20,6 +20,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..engine.method import MethodBase, Oracles, register
 from .compressors import Compressor, FLOAT_BITS
 from .linalg import frob_norm, project_psd, solve_newton_system
 
@@ -36,7 +37,10 @@ class FedNLBCState(NamedTuple):
     step: jax.Array
 
 
-class FedNLBC:
+class FedNLBC(MethodBase):
+    traj_field = "z"  # devices only ever hold the learned model z
+    silo_fields = ("grad_w", "h_local")
+
     def __init__(
         self,
         grad_fn: Callable[[jax.Array], jax.Array],   # x -> (n, d)
@@ -114,12 +118,8 @@ class FedNLBC:
         down = self.comp_m.bits((d,)) + 1  # model increment + xi bit
         return up, down
 
-    def run(self, x0, n, num_rounds, seed: int = 0):
-        state = self.init(x0, n, seed=seed)
 
-        def body(state, _):
-            new = self.step(state)
-            return new, new.z
-
-        final, zs = jax.lax.scan(body, state, None, length=num_rounds)
-        return final, jnp.concatenate([x0[None], zs], axis=0)
+@register("fednl-bc")
+def _make_fednl_bc(oracles: Oracles, compressor, model_compressor, **params):
+    return FedNLBC(oracles.grad, oracles.hess, compressor, model_compressor,
+                   **params)

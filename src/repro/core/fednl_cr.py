@@ -16,12 +16,13 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from ..engine.method import MethodBase, Oracles, register
 from .compressors import Compressor, FLOAT_BITS
 from .fednl import FedNLState
 from .linalg import frob_norm, solve_cubic_subproblem
 
 
-class FedNLCR:
+class FedNLCR(MethodBase):
     def __init__(
         self,
         grad_fn: Callable[[jax.Array], jax.Array],
@@ -75,12 +76,7 @@ class FedNLCR:
     def bits_per_round(self, d: int) -> int:
         return d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
 
-    def run(self, x0, n, num_rounds, h0=None, seed: int = 0):
-        state = self.init(x0, n, h0=h0, seed=seed)
 
-        def body(state, _):
-            new = self.step(state)
-            return new, new.x
-
-        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
-        return final, jnp.concatenate([x0[None], xs], axis=0)
+@register("fednl-cr")
+def _make_fednl_cr(oracles: Oracles, compressor, **params):
+    return FedNLCR(oracles.grad, oracles.hess, compressor, **params)

@@ -15,13 +15,14 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..engine.method import MethodBase, Oracles, register
 from .compressors import Compressor, FLOAT_BITS
 from .fednl import FedNLState
 from .linalg import frob_norm, project_psd, solve_newton_system
 from .newton import backtracking
 
 
-class FedNLLS:
+class FedNLLS(MethodBase):
     def __init__(
         self,
         value_fn: Callable[[jax.Array], jax.Array],   # x -> global f(x)
@@ -79,12 +80,12 @@ class FedNLLS:
         # f_i + gradient + S_i
         return FLOAT_BITS + d * FLOAT_BITS + self.comp.bits((d, d))
 
-    def run(self, x0, n, num_rounds, h0=None, seed: int = 0):
-        state = self.init(x0, n, h0=h0, seed=seed)
+    def init_bits(self, d: int) -> int:
+        """H_i^0 = hess_i(x0) shipped once (as in FedNL)."""
+        return d * (d + 1) // 2 * FLOAT_BITS
 
-        def body(state, _):
-            new = self.step(state)
-            return new, new.x
 
-        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
-        return final, jnp.concatenate([x0[None], xs], axis=0)
+@register("fednl-ls")
+def _make_fednl_ls(oracles: Oracles, compressor, **params):
+    return FedNLLS(oracles.value, oracles.grad, oracles.hess, compressor,
+                   **params)

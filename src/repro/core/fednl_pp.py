@@ -25,6 +25,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..engine.method import MethodBase, Oracles, register
 from .compressors import Compressor, FLOAT_BITS
 from .linalg import frob_norm, solve_newton_system
 
@@ -42,7 +43,9 @@ class FedNLPPState(NamedTuple):
     step: jax.Array
 
 
-class FedNLPP:
+class FedNLPP(MethodBase):
+    silo_fields = ("w", "h_local", "l_local", "g_local")
+
     def __init__(
         self,
         grad_fn_at: Callable[[jax.Array], jax.Array],   # x -> (n, d) per-silo grads at x
@@ -118,12 +121,7 @@ class FedNLPP:
         """Per *active* device: S_i + (l diff) + (g diff)."""
         return self.comp.bits((d, d)) + FLOAT_BITS + d * FLOAT_BITS
 
-    def run(self, x0, n, num_rounds, seed: int = 0):
-        state = self.init(x0, n, seed=seed)
 
-        def body(state, _):
-            new = self.step(state)
-            return new, new.x
-
-        final, xs = jax.lax.scan(body, state, None, length=num_rounds)
-        return final, jnp.concatenate([x0[None], xs], axis=0)
+@register("fednl-pp")
+def _make_fednl_pp(oracles: Oracles, compressor, **params):
+    return FedNLPP(oracles.grad, oracles.hess, compressor, **params)

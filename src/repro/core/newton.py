@@ -6,15 +6,21 @@ All are special cases of FedNL's template:
   Newton-Star (NS):  C = 0, alpha = 0, H_i^0 = hess_i(x*) (oracle)
   Newton-Zero (N0):  C = 0, alpha = 0, H_i^0 = hess_i(x0)
   N0-LS:             N0 direction + backtracking line search
+
+Each is a ``Method`` (engine protocol): init/step/bits_per_round, with
+the round loop supplied by ``MethodBase``. The module-level ``*_run``
+functions are kept as thin wrappers over the classes.
 """
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..engine.method import MethodBase, Oracles, register
+from .compressors import FLOAT_BITS
 from .linalg import project_psd, solve_newton_system
 
 
@@ -23,33 +29,66 @@ class SimpleState(NamedTuple):
     h: jax.Array  # fixed or current (d, d) Hessian estimate
 
 
-def newton_step(x, grad_fn, hess_fn):
-    """Classical Newton on the averaged problem."""
-    g = jnp.mean(grad_fn(x), axis=0)
-    h = jnp.mean(hess_fn(x), axis=0)
-    return x - solve_newton_system(h, g)
+class Newton(MethodBase):
+    """Classical Newton on the averaged problem (uncompressed)."""
+
+    silo_fields = ()
+
+    def __init__(self, grad_fn, hess_fn):
+        self.grad_fn = grad_fn
+        self.hess_fn = hess_fn
+
+    def init(self, x0, n: int = 0, seed: int = 0) -> SimpleState:
+        # h is recomputed from x every step; don't pay a Hessian eval here
+        d = x0.shape[0]
+        return SimpleState(x=x0, h=jnp.zeros((d, d), x0.dtype))
+
+    def step(self, state: SimpleState) -> SimpleState:
+        g = jnp.mean(self.grad_fn(state.x), axis=0)
+        h = jnp.mean(self.hess_fn(state.x), axis=0)
+        return SimpleState(x=state.x - solve_newton_system(h, g), h=h)
+
+    def bits_per_round(self, d: int) -> int:
+        # gradient + full symmetric Hessian per device per round
+        return d * FLOAT_BITS + d * (d + 1) // 2 * FLOAT_BITS
 
 
-def newton_run(x0, grad_fn, hess_fn, num_rounds):
-    def body(x, _):
-        xn = newton_step(x, grad_fn, hess_fn)
-        return xn, xn
+class FixedHessian(MethodBase):
+    """NS (h_fixed = hess(x*)) and N0 (h_fixed = hess(x0)); eq. (9)/(55).
 
-    final, xs = jax.lax.scan(body, x0, None, length=num_rounds)
-    return final, jnp.concatenate([x0[None], xs], axis=0)
+    When ``h_fixed`` is None the estimate is frozen at the mean local
+    Hessian at x0 — Newton-Zero's initialization."""
 
+    silo_fields = ()
 
-def fixed_hessian_run(x0, h_fixed, grad_fn, num_rounds, mu: float = 0.0):
-    """NS (h_fixed = hess(x*)) and N0 (h_fixed = hess(x0)); eq. (9)/(55)."""
-    h_eff = project_psd(h_fixed, mu) if mu > 0 else h_fixed
+    def __init__(self, grad_fn, h_fixed: Optional[jax.Array] = None,
+                 hess_fn=None, mu: float = 0.0):
+        assert h_fixed is not None or hess_fn is not None
+        self.grad_fn = grad_fn
+        self.h_fixed = h_fixed
+        self.hess_fn = hess_fn
+        self.mu = mu
 
-    def body(x, _):
-        g = jnp.mean(grad_fn(x), axis=0)
-        xn = x - solve_newton_system(h_eff, g)
-        return xn, xn
+    def _h_eff(self, x0):
+        h = self.h_fixed
+        if h is None:
+            h = jnp.mean(self.hess_fn(x0), axis=0)
+        return project_psd(h, self.mu) if self.mu > 0 else h
 
-    final, xs = jax.lax.scan(body, x0, None, length=num_rounds)
-    return final, jnp.concatenate([x0[None], xs], axis=0)
+    def init(self, x0, n: int = 0, seed: int = 0) -> SimpleState:
+        return SimpleState(x=x0, h=self._h_eff(x0))
+
+    def step(self, state: SimpleState) -> SimpleState:
+        g = jnp.mean(self.grad_fn(state.x), axis=0)
+        return state._replace(x=state.x - solve_newton_system(state.h, g))
+
+    def bits_per_round(self, d: int) -> int:
+        return d * FLOAT_BITS  # gradient only — the Hessian never moves
+
+    def init_bits(self, d: int) -> int:
+        """The one-time cost of shipping the frozen Hessian estimate
+        (hess(x0) for N0, hess(x*) for NS) — the paper's accounting."""
+        return d * (d + 1) // 2 * FLOAT_BITS
 
 
 def backtracking(value_fn, x, d_dir, g, c: float = 0.5, gamma: float = 0.5,
@@ -74,17 +113,74 @@ def backtracking(value_fn, x, d_dir, g, c: float = 0.5, gamma: float = 0.5,
     return t
 
 
+class N0LS(FixedHessian):
+    """Newton-Zero direction + backtracking line search (N0-LS)."""
+
+    def __init__(self, value_fn, grad_fn, h_fixed: Optional[jax.Array] = None,
+                 hess_fn=None, mu: float = 0.0, c: float = 0.5,
+                 gamma: float = 0.5):
+        super().__init__(grad_fn, h_fixed=h_fixed, hess_fn=hess_fn, mu=mu)
+        self.value_fn = value_fn
+        self.c = c
+        self.gamma = gamma
+
+    def step(self, state: SimpleState) -> SimpleState:
+        g = jnp.mean(self.grad_fn(state.x), axis=0)
+        d_dir = -solve_newton_system(state.h, g)
+        t = backtracking(self.value_fn, state.x, d_dir, g, c=self.c,
+                         gamma=self.gamma)
+        return state._replace(x=state.x + t * d_dir)
+
+    def bits_per_round(self, d: int) -> int:
+        return FLOAT_BITS + d * FLOAT_BITS  # f_i probe + gradient
+
+
+# -- legacy function drivers (wrappers over the Method classes) ----------------
+
+
+def newton_step(x, grad_fn, hess_fn):
+    """Classical Newton on the averaged problem."""
+    g = jnp.mean(grad_fn(x), axis=0)
+    h = jnp.mean(hess_fn(x), axis=0)
+    return x - solve_newton_system(h, g)
+
+
+def newton_run(x0, grad_fn, hess_fn, num_rounds):
+    final, xs = Newton(grad_fn, hess_fn).run(x0, 0, num_rounds)
+    return final.x, xs
+
+
+def fixed_hessian_run(x0, h_fixed, grad_fn, num_rounds, mu: float = 0.0):
+    """NS (h_fixed = hess(x*)) and N0 (h_fixed = hess(x0)); eq. (9)/(55)."""
+    final, xs = FixedHessian(grad_fn, h_fixed=h_fixed, mu=mu).run(
+        x0, 0, num_rounds)
+    return final.x, xs
+
+
 def n0_ls_run(x0, h_fixed, value_fn, grad_fn, num_rounds, mu: float = 0.0,
               c: float = 0.5, gamma: float = 0.5):
     """Newton-Zero with backtracking line search (N0-LS)."""
-    h_eff = project_psd(h_fixed, mu) if mu > 0 else h_fixed
+    final, xs = N0LS(value_fn, grad_fn, h_fixed=h_fixed, mu=mu, c=c,
+                     gamma=gamma).run(x0, 0, num_rounds)
+    return final.x, xs
 
-    def body(x, _):
-        g = jnp.mean(grad_fn(x), axis=0)
-        d_dir = -solve_newton_system(h_eff, g)
-        t = backtracking(value_fn, x, d_dir, g, c=c, gamma=gamma)
-        xn = x + t * d_dir
-        return xn, xn
 
-    final, xs = jax.lax.scan(body, x0, None, length=num_rounds)
-    return final, jnp.concatenate([x0[None], xs], axis=0)
+@register("newton")
+def _make_newton(oracles: Oracles, compressor=None, **params):
+    return Newton(oracles.grad, oracles.hess)
+
+
+@register("n0")
+def _make_n0(oracles: Oracles, compressor=None, **params):
+    return FixedHessian(oracles.grad, hess_fn=oracles.hess, **params)
+
+
+@register("ns")
+def _make_ns(oracles: Oracles, compressor=None, *, h_fixed, **params):
+    # NS needs the oracle Hessian at x*; pass it as h_fixed.
+    return FixedHessian(oracles.grad, h_fixed=h_fixed, **params)
+
+
+@register("n0-ls")
+def _make_n0_ls(oracles: Oracles, compressor=None, **params):
+    return N0LS(oracles.value, oracles.grad, hess_fn=oracles.hess, **params)

@@ -1,0 +1,38 @@
+"""Canonical benchmark problems: the experimental setup of eq. (10) on
+LibSVM-shaped stand-ins (Table 3 sizes) or the Sec. A.14 synthetic
+generator, packaged as the oracle dict the engine and benchmark harness
+consume. Single source of truth — ``benchmarks/common.py`` and
+``repro.launch.sweep`` both delegate here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.newton import newton_run
+from ..core.objectives import (batch_grad, batch_hess, global_value,
+                               lipschitz_constants)
+from .synthetic import make_libsvm_like, make_synthetic
+
+
+def make_problem(name: str = "a1a", lam: float = 1e-3, seed: int = 0) -> dict:
+    """Returns dict with oracles, x*, constants. 'a1a' etc. use Table 3
+    shapes; 'synthetic:ALPHA:BETA' uses the Sec. A.14 generator."""
+    key = jax.random.PRNGKey(seed)
+    if name.startswith("synthetic"):
+        _, alpha, beta = name.split(":")
+        data = make_synthetic(key, float(alpha), float(beta), n=30, m=200,
+                              d=100, lam=lam)
+    else:
+        data = make_libsvm_like(key, name, lam=lam)
+    grad_fn = lambda x: batch_grad(x, data)
+    hess_fn = lambda x: batch_hess(x, data)
+    val_fn = lambda x: global_value(x, data)
+    d = data.a.shape[-1]
+    xstar, _ = newton_run(jnp.zeros(d), grad_fn, hess_fn, 25)
+    return dict(
+        data=data, grad=grad_fn, hess=hess_fn, val=val_fn, xstar=xstar,
+        fstar=float(val_fn(xstar)), d=d, n=data.a.shape[0],
+        consts=lipschitz_constants(data),
+    )

@@ -1,0 +1,15 @@
+"""Unified experiment engine for the FedNL family.
+
+One protocol (``Method``), one registry (construct any method by string
+key), one driver (vmap-over-seeds + scan-over-rounds), one sweep runner
+(``ExperimentSpec`` grids -> stacked histories + tidy records). See
+``method.py`` for the protocol contract and ``sweep.py`` for execution.
+"""
+
+from .method import (MethodBase, Oracles, available_methods, make_method,
+                     register, scan_rounds)
+from .records import (bits_curve, bits_to_accuracy, init_bits,
+                      rounds_to_accuracy, summary_records,
+                      uplink_bits_per_round)
+from .sweep import (CellResult, ExperimentSpec, Sweep, SweepResult,
+                    build_compressor, run_cell, run_sweep)

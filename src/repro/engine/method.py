@@ -1,0 +1,145 @@
+"""The ``Method`` protocol and registry — the contract every optimizer in
+the FedNL family (and the Newton reference methods) implements so one
+engine can drive all of them.
+
+A *method* is a stateless-config object with three hooks:
+
+  init(x0, n, *, seed=0, **kw) -> State   # pytree (NamedTuple) of arrays
+  step(State) -> State                    # one communication round, jittable
+  bits_per_round(d) -> int | (int, int)   # analytic uplink (and downlink)
+
+plus two class attributes consumed by the shared driver:
+
+  traj_field: str   # which State field is the monitored iterate
+                    # ("x" for most methods, "z" for FedNL-BC)
+  silo_fields: tuple[str, ...]  # State fields with a leading silo axis
+                    # (used by the shard_map execution path)
+
+``MethodBase`` supplies the single ``run`` loop (lax.scan over rounds)
+that used to be copy-pasted into every algorithm module, and
+``scan_rounds`` is the same driver in function form for the sweep
+runner, where it sits under an extra ``vmap`` over seeds.
+
+The registry maps string keys ("fednl", "fednl-pp", ...) to factories
+``factory(oracles, compressor=None, **params) -> Method`` so sweeps and
+CLIs can construct any method declaratively. Factories self-register in
+the module that defines the method class.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+class Oracles(NamedTuple):
+    """Problem oracles in the paper's federated form.
+
+    value: x -> ()        global objective f(x) (may be None for methods
+                          that never evaluate f, e.g. plain FedNL)
+    grad:  x -> (n, d)    stacked per-silo gradients
+    hess:  x -> (n, d, d) stacked per-silo Hessians
+    """
+
+    value: Optional[Callable[[jax.Array], jax.Array]]
+    grad: Callable[[jax.Array], jax.Array]
+    hess: Callable[[jax.Array], jax.Array]
+
+
+@runtime_checkable
+class Method(Protocol):
+    traj_field: str
+
+    def init(self, x0: jax.Array, n: int, *, seed=0, **kw): ...
+
+    def step(self, state): ...
+
+    def bits_per_round(self, d: int): ...
+
+
+def scan_rounds(method, state, num_rounds: int):
+    """Shared round loop: ``lax.scan`` of ``method.step``, recording the
+    method's monitored iterate each round. Returns (final_state, xs)
+    with xs of shape (num_rounds, d) — the caller prepends x0."""
+
+    def body(s, _):
+        ns = method.step(s)
+        return ns, getattr(ns, method.traj_field)
+
+    return jax.lax.scan(body, state, None, length=num_rounds)
+
+
+class MethodBase:
+    """Mixin providing the one true ``run`` driver.
+
+    Subclasses implement init/step/bits_per_round; ``run`` is the scan
+    loop every algorithm module used to duplicate.
+    """
+
+    traj_field: str = "x"
+    silo_fields: tuple = ("h_local",)
+
+    def run(self, x0, n, num_rounds, *args, seed: int = 0, **init_kw):
+        """Run ``num_rounds`` communication rounds from ``x0``.
+
+        Returns (final_state, (num_rounds+1, d) iterate history with x0
+        prepended). Extra positional/keyword args (e.g. ``h0``) are
+        forwarded to ``init``.
+        """
+        state = self.init(x0, n, *args, seed=seed, **init_kw)
+        final, xs = scan_rounds(self, state, num_rounds)
+        return final, jnp.concatenate([jnp.asarray(x0)[None], xs], axis=0)
+
+
+# -- registry -----------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[..., Any]] = {}
+
+
+def register(name: str):
+    """Decorator: register ``factory(oracles, compressor=None, **params)``
+    under ``name``. Re-registration overwrites (last wins) so notebooks
+    can hot-patch methods."""
+
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def _ensure_registered() -> None:
+    # Factories live next to their method classes in repro.core; import
+    # lazily to avoid a package-init cycle (core modules import this
+    # module for MethodBase). Unconditional: a user registering their own
+    # method first must not hide the built-ins (sys.modules makes this
+    # free after the first call).
+    from .. import core  # noqa: F401
+
+
+def available_methods() -> list[str]:
+    _ensure_registered()
+    return sorted(_REGISTRY)
+
+
+def make_method(name: str, oracles: Oracles, compressor=None, **params):
+    """Construct a registered method by string key.
+
+    ``params`` are forwarded to the factory (e.g. alpha, option, mu,
+    tau, p, eta, l_star, model_compressor)."""
+    _ensure_registered()
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown method {name!r}; available: {available_methods()}"
+        ) from None
+    for k, v in params.items():
+        # declarative compressor params: ("topk", 16) -> TopK(k=16)
+        if k.endswith("compressor") and isinstance(v, tuple):
+            from .sweep import build_compressor
+
+            params[k] = build_compressor(*v)
+    return factory(oracles, compressor, **params)

@@ -1,0 +1,98 @@
+"""Tidy-record emission and communication accounting for sweep results.
+
+The paper's x-axis is cumulative communicated bits per node; every cell
+of a sweep carries an analytic bits curve (``bits_curve``) next to its
+gap curve so figure code reduces to "plot records". ``records`` flattens
+a sweep into a list of plain dicts (one row per (cell, seed, round)) —
+trivially convertible to CSV or a dataframe.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def uplink_bits_per_round(method, d: int) -> float:
+    """Total per-round communication charged on the paper's x-axis.
+
+    Methods with bidirectional compression (FedNL-BC and friends) return
+    an (uplink, downlink) tuple from ``bits_per_round``; the figures
+    charge the sum."""
+    b = method.bits_per_round(d)
+    if isinstance(b, tuple):
+        return float(sum(b))
+    return float(b)
+
+
+def init_bits(method, d: int) -> float:
+    """One-time setup cost (e.g. shipping H_i^0); 0 when undefined."""
+    fn = getattr(method, "init_bits", None)
+    return float(fn(d)) if fn is not None else 0.0
+
+
+def bits_curve(method, d: int, num_rounds: int) -> np.ndarray:
+    """(num_rounds+1,) cumulative bits per node, paper accounting."""
+    per = uplink_bits_per_round(method, d)
+    return init_bits(method, d) + per * np.arange(num_rounds + 1)
+
+
+def bits_to_accuracy(gap_curve, bits: np.ndarray, target: float) -> float:
+    """First cumulative-bits value at which gap <= target (inf if never)."""
+    gap_curve = np.asarray(gap_curve)
+    idx = np.nonzero(gap_curve <= target)[0]
+    if len(idx) == 0:
+        return float("inf")
+    return float(bits[idx[0]])
+
+
+def rounds_to_accuracy(gap_curve, target: float) -> int:
+    idx = np.nonzero(np.asarray(gap_curve) <= target)[0]
+    return int(idx[0]) if len(idx) else -1
+
+
+def cell_records(cell) -> list[dict]:
+    """One tidy row per (seed, round) for a finished ``CellResult``."""
+    spec = cell.spec
+    rows = []
+    for si, seed in enumerate(spec.seeds):
+        for k in range(cell.gaps.shape[1]):
+            rows.append(
+                dict(
+                    name=spec.label,
+                    method=spec.method,
+                    compressor=spec.compressor or "",
+                    level=spec.level if spec.level is not None else "",
+                    seed=seed,
+                    round=k,
+                    bits=float(cell.bits[k]),
+                    gap=float(cell.gaps[si, k]),
+                    us_per_round=cell.us_per_round,
+                )
+            )
+    return rows
+
+
+def summary_records(cells, target: Optional[float] = None) -> list[dict]:
+    """One row per cell: wall-clock and (optionally) bits/rounds to
+    ``target`` accuracy for the first seed (the paper's single-run
+    figures) plus the across-seed worst case."""
+    rows = []
+    for cell in cells:
+        row = dict(
+            name=cell.spec.label,
+            method=cell.spec.method,
+            compressor=cell.spec.compressor or "",
+            level=cell.spec.level if cell.spec.level is not None else "",
+            num_seeds=len(cell.spec.seeds),
+            us_per_round=cell.us_per_round,
+        )
+        if target is not None:
+            row["bits_to_target"] = bits_to_accuracy(
+                cell.gaps[0], cell.bits, target)
+            row["rounds_to_target"] = rounds_to_accuracy(cell.gaps[0], target)
+            row["bits_to_target_worst_seed"] = max(
+                bits_to_accuracy(g, cell.bits, target) for g in cell.gaps)
+        rows.append(row)
+    return rows

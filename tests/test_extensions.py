@@ -42,6 +42,7 @@ def _subsampled_hess(data, m_sub):
     return hess
 
 
+@pytest.mark.slow  # stochastic noise-floor check; long and seed-sensitive
 def test_stochastic_hessian_fednl_converges(prob):
     """Exact gradients + 50%-subsampled Hessians: x* stays the fixed
     point (gradients exact), so iterates keep converging — linearly, at a

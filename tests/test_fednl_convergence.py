@@ -1,4 +1,8 @@
-"""Theorem-level convergence tests for the FedNL family (float64)."""
+"""Theorem-level convergence tests for the FedNL family (float64).
+
+Long-running (many rounds at f64): marked slow; the CI lane skips them,
+the local tier-1 command runs them.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +16,8 @@ from repro.core.newton import fixed_hessian_run, n0_ls_run, newton_run
 from repro.core.objectives import (batch_grad, batch_hess, global_grad,
                                    global_value, lipschitz_constants)
 from repro.data.synthetic import make_synthetic
+
+pytestmark = pytest.mark.slow
 
 
 @pytest.fixture(scope="module")

@@ -3,6 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.linalg import (frob_norm, project_psd, solve_cubic_subproblem,

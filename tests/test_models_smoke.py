@@ -11,6 +11,9 @@ from repro.configs import ARCHS, get_config
 from repro.launch.steps import make_optimizer, make_serve_step, make_train_step
 from repro.models import build_model
 
+# ~1 min of compile-heavy smoke across 10 architectures: slow lane only
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, b=2, t=32, seed=0):
     key = jax.random.PRNGKey(seed)

@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 
+@pytest.mark.slow
 def test_train_driver_learns():
     from repro.launch.train import train
 
@@ -20,6 +21,7 @@ def test_train_driver_learns():
     assert hist[-1] < hist[0] - 0.5, hist[:3] + hist[-3:]
 
 
+@pytest.mark.slow
 def test_train_driver_fednl_optimizer_learns():
     from repro.launch.train import train
 
