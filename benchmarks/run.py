@@ -106,7 +106,7 @@ def fig2_local(fast=False):
     b_gd = bits_to_accuracy(gaps(prob, xs_gd), d * FLOAT_BITS, TARGET)
 
     rd = RandomDithering(s=int(d ** 0.5))
-    om = rd.omega_for((d,))
+    om = rd.spec((d,)).omega
     diana = Diana(prob["grad"], rd, prob["consts"]["L"], n, om)
     (_, xs_di), _ = _run(diana.run, x0, n, rounds * 10)
     b_diana = bits_to_accuracy(gaps(prob, xs_di), diana.bits_per_round(d),
@@ -160,7 +160,7 @@ def fig2_global(fast=False):
     b_gdls = bits_to_accuracy(gaps(prob, xs_gls), d * FLOAT_BITS, TARGET)
 
     rd = RandomDithering(s=int(d ** 0.5))
-    om = rd.omega_for((d,))
+    om = rd.spec((d,)).omega
     diana = Diana(prob["grad"], rd, prob["consts"]["L"], n, om)
     (_, xs_di), _ = _run(diana.run, x0, n, rounds * 20)
     b_diana = bits_to_accuracy(gaps(prob, xs_di), diana.bits_per_round(d),
@@ -249,8 +249,8 @@ def fig6_update_rules(fast=False):
     d, n = prob["d"], prob["n"]
     x0 = _near_x0(prob, scale=0.3)
     k = d // 2
-    delta = TopK(k=k).delta_for((d, d))
-    omega = RandK(k=k).omega_for((d, d))
+    delta = TopK(k=k).spec((d, d)).delta
+    omega = RandK(k=k).spec((d, d)).omega
     res, us = _sweep(prob, [
         ExperimentSpec("fednl", "topk", k,
                        params=dict(alpha=1.0, option=1, mu=1e-3),
@@ -289,7 +289,7 @@ def fig7_bc(fast=False):
     bits = {c.spec.label: bits_at(c.gaps[0], c.bits, TARGET)
             for c in res.cells}
     rd = RandomDithering(s=int(d ** 0.5))
-    om = rd.omega_for((d,))
+    om = rd.spec((d,)).omega
     dore = Dore(prob["grad"], rd, rd, prob["consts"]["L"], n, om, om)
     (_, xs), _ = _run(dore.run, x0, n, 3000 if not fast else 800)
     up, down = dore.bits_per_round(d)
@@ -315,7 +315,7 @@ def fig9_pp(fast=False):
     mono = rounds_out[taus[0]] >= rounds_out[taus[-1]] >= 0
 
     rd = RandomDithering(s=int(d ** 0.5))
-    om = rd.omega_for((d,))
+    om = rd.spec((d,)).omega
     art = Artemis(prob["grad"], rd, prob["consts"]["L"], n, om,
                   tau=max(1, int(0.5 * n)))
     (_, xs), _ = _run(art.run, x0, n, 3000 if not fast else 800)
@@ -396,6 +396,86 @@ def table2_rates(fast=False):
            + f"|all={all(checks.values())}")
 
 
+def payload_roundtrip(fast=False):
+    """Compressor wire-format micro-benchmark: payload compress /
+    decompress round-trip vs INDEPENDENT seed-era dense oracles on a
+    (d, d) Hessian diff (so a lossy codec actually fails the claim),
+    measured-vs-analytic bits, and the Pallas block_topk payload op vs
+    the jnp codec."""
+    from repro.core import BlockTopK, payload_bits
+    from repro.kernels.block_topk import block_topk, block_topk_payload, \
+        payload_to_dense
+
+    d = 128 if fast else 256
+    m = jax.random.normal(jax.random.PRNGKey(0), (d, d))
+    m = 0.5 * (m + m.T)
+    key = jax.random.PRNGKey(1)
+
+    # independent dense oracles (seed-era formulas / the Pallas kernel
+    # path), deliberately NOT comp.__call__ — that is the round-trip
+    def topk_oracle(x, _):
+        flat = x.reshape(-1)
+        _, idx = jax.lax.top_k(jnp.abs(flat), 4 * d)
+        return jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(x.shape)
+
+    def rankr_oracle(x, _):
+        lam, q = jnp.linalg.eigh(0.5 * (x + x.T))
+        _, idx = jax.lax.top_k(jnp.abs(lam), 4)
+        return (q[:, idx] * lam[idx]) @ q[:, idx].T
+
+    def randk_oracle(x, k):
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        idx = jax.random.choice(k, n, (4 * d,), replace=False)
+        mask = jnp.zeros((n,), x.dtype).at[idx].set(1.0)
+        return (flat * mask * (n / (4 * d))).reshape(x.shape)
+
+    cases = {
+        "topk": (TopK(k=4 * d), topk_oracle),
+        "blocktopk": (BlockTopK(k_per_block=64, block=128),
+                      lambda x, _: block_topk(x, k=64, block=128)),
+        "rankr": (RankR(4), rankr_oracle),
+        "randk": (RandK(k=4 * d), randk_oracle),
+    }
+
+    def bench(fn, *args, reps=20):
+        out = jax.block_until_ready(fn(*args))  # compile
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return out, (time.time() - t0) * 1e6 / reps
+
+    us_total, fields, ok_bits, ok_ident = 0.0, [], True, True
+    for name, (comp, oracle) in cases.items():
+        dense_fn = jax.jit(oracle)
+        rt_fn = jax.jit(lambda x, k, c=comp: c.decompress(
+            c.compress(x, k), x.shape))
+        out_dense, us_dense = bench(dense_fn, m, key)
+        out_rt, us_rt = bench(rt_fn, m, key)
+        ok_ident &= bool(jnp.all(out_dense == out_rt))
+        measured = payload_bits(comp, (d, d))
+        analytic = comp.bits((d, d))
+        ok_bits &= (measured == analytic)
+        us_total += us_rt
+        # ';' not ',' inside the derived field — bench stdout is 3-col CSV
+        fields.append(f"{name}:us_dense={us_dense:.0f};us_rt={us_rt:.0f};"
+                      f"bits={measured}")
+
+    # Pallas payload op agrees with the jnp codec's decompressed matrix
+    bt = cases["blocktopk"][0]
+    vals, idx = block_topk_payload(m, k=64, block=128)
+    kernel_dense = payload_to_dense(vals, idx, m.shape, block=128)
+    codec_dense = bt.decompress(bt.compress(m), m.shape)
+    ok_kernel = bool(jnp.all(kernel_dense == codec_dense))
+
+    report("payload_roundtrip", us_total,
+           "|".join(fields)
+           + f"|claim_roundtrip_bit_identical={ok_ident}"
+           f"|claim_measured_eq_analytic={ok_bits}"
+           f"|claim_pallas_payload_matches_codec={ok_kernel}")
+
+
 def engine_vmap(fast=False):
     """The engine's headline: an s-seed cell as ONE vmapped jitted program
     vs s serial per-seed runs (the seed-era execution model)."""
@@ -453,17 +533,23 @@ def roofline(fast=False):
 
 BENCHES = [fig2_local, fig2_global, fig2_nl1, fig3_compression, fig4_options,
            fig6_update_rules, fig7_bc, fig9_pp, fig14_heterogeneity,
-           table2_rates, engine_vmap, roofline]
+           table2_rates, payload_roundtrip, engine_vmap, roofline]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (one object per "
+                         "bench: name, us_per_call, derived) — the "
+                         "BENCH_*.json artifact the CI bench-smoke lane "
+                         "uploads")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for bench in BENCHES:
-        if args.only and bench.__name__ != args.only:
+        if args.only and bench.__name__ not in args.only.split(","):
             continue
         try:
             bench(fast=args.fast)
@@ -472,6 +558,10 @@ def main() -> None:
 
             traceback.print_exc()
             report(bench.__name__, 0.0, f"ERROR:{type(e).__name__}:{e}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([dict(name=n, us_per_call=u, derived=d)
+                       for n, u, d in RESULTS], f, indent=2)
 
 
 if __name__ == "__main__":

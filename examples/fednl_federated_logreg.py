@@ -59,7 +59,7 @@ print(f"\nshard_map execution over {jax.device_count()} device(s): "
 # --- baselines ------------------------------------------------------------------
 _, xs_gd = gd_run(x0, grad_fn, 1.0 / consts["L"], 2000)
 rd = RandomDithering(s=int(d ** 0.5))
-diana = Diana(grad_fn, rd, consts["L"], n, rd.omega_for((d,)))
+diana = Diana(grad_fn, rd, consts["L"], n, rd.spec((d,)).omega)
 _, xs_di = diana.run(x0, n, 2000)
 
 gap_gd = float(val_fn(xs_gd[-1])) - fstar

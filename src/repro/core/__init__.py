@@ -1,17 +1,29 @@
 """FedNL core: the paper's algorithms, faithfully, in JAX."""
 
 from .compressors import (
+    BlockSparsePayload,
     BlockTopK,
+    BlockTopKThreshold,
+    CompSpec,
+    Compressor,
+    DensePayload,
+    DitheredPayload,
     Identity,
+    LowRankPayload,
     NaturalSparsification,
     PowerSGD,
     RandK,
     RandomDithering,
     RankR,
+    SparsePayload,
     TopK,
     Zero,
     ab_constants,
     alpha_for,
+    available_compressors,
+    make_compressor,
+    payload_bits,
+    register_compressor,
 )
 from .extensions import FedNLPPBC, StochasticFedNL
 from .fednl import FedNL, FedNLState

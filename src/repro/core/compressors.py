@@ -1,29 +1,45 @@
-"""Compression operators for FedNL (Definitions 3.2 and 3.3).
+"""Compression operators for FedNL (Definitions 3.2 and 3.3) — the
+wire-format API.
 
-Two families, exactly as in the paper:
+Two operator families, exactly as in the paper:
 
-* ``ContractiveCompressor``  (class C(delta), Def 3.3, deterministic):
+* ``C(delta)``  (Def 3.3, deterministic, contractive):
     ||C(M)||_F <= ||M||_F   and   ||C(M) - M||_F^2 <= (1 - delta) ||M||_F^2
   Examples: Top-K (delta = K/d^2), Rank-R (delta = R/d), PowerSGD-R
   (scaled so the first inequality holds), block-local Top-K.
 
-* ``UnbiasedCompressor``  (class B(omega), Def 3.2, randomized):
+* ``B(omega)``  (Def 3.2, randomized, unbiased):
     E[C(M)] = M   and   E||C(M) - M||_F^2 <= omega ||M||_F^2
   Examples: Rand-K (omega = d^2/K - 1), random dithering (vectors).
 
-Every compressor reports ``bits(shape)`` — the uplink payload in bits for
-one application — which powers the paper's communicated-bits x-axis.
-Matrix compressors operate on (d, d) arrays; vector compressors on (d,).
+Every compressor is a *wire codec*:
 
-All operators are pure JAX and jittable. Randomized ones take an explicit
-``key``.
+    payload = comp.compress(m, key)        # fixed-shape jittable pytree
+    dense   = comp.decompress(payload, m.shape)
+    comp(m, key) == decompress(compress(m, key), m.shape)   # bit-identical
+
+The payload is the first-class object a device actually uplinks —
+indices+values for the sparsifiers, factors for the low-rank family,
+levels+norm for dithering — and ``payload.bits()`` is the *measured*
+wire size, derived from the payload's own arrays (dtype widths x
+static shapes), not asserted. ``comp.spec(shape)`` returns the analytic
+``CompSpec(delta, omega, bits, deterministic)`` consumed by
+``alpha_for`` / ``ab_constants``; ``payload_bits`` measures the payload
+via ``jax.eval_shape`` (no compute, so it is exact for any shape).
+
+Compressors self-register in the string-keyed registry (mirroring the
+Method registry): ``make_compressor("rankr", 1) -> RankR(1)``.
+
+All operators are pure JAX; payloads are registered pytrees, so
+``compress``/``decompress`` vmap over a silo axis with static payload
+shapes. Randomized operators take an explicit ``key``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Optional
+import math
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,33 +48,267 @@ FLOAT_BITS = 64  # the paper counts double-precision floats
 INDEX_BITS = 32
 
 
+def numel(shape) -> int:
+    """Product of a shape tuple (the paper's d^2 for matrices)."""
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def _dtype_bits(x) -> int:
+    """Wire width of one element of ``x`` (array or ShapeDtypeStruct)."""
+    return 8 * jnp.dtype(x.dtype).itemsize
+
+
+def canonical_float_bits() -> int:
+    """Bits of the ambient float dtype (64 under jax_enable_x64 — the
+    paper's accounting — else 32). Used for the measured width of the
+    uncompressed floats every method ships (gradients, l_i)."""
+    return 8 * jnp.dtype(jnp.result_type(float)).itemsize
+
+
 # ---------------------------------------------------------------------------
-# Base classes
+# Payloads — the wire objects
 # ---------------------------------------------------------------------------
+#
+# Each payload is a frozen dataclass registered as a pytree: array fields
+# are leaves (so payloads flow through jit/vmap/scan), everything else is
+# static aux data captured at compress time. ``bits()`` reads only static
+# shape/dtype structure — it works on concrete arrays and on the
+# ShapeDtypeStructs ``jax.eval_shape`` produces, and it reads *trailing*
+# dims so a payload vmapped over a silo axis still reports per-silo bits.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparsePayload:
+    """k (value, flat-index) pairs. Indices may be -1 (padding slots,
+    dropped on decompress)."""
+
+    values: jax.Array   # (..., k)
+    indices: jax.Array  # (..., k) int32
+
+    def tree_flatten(self):
+        return (self.values, self.indices), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def bits(self) -> int:
+        k = int(self.values.shape[-1])
+        return k * (_dtype_bits(self.values) + _dtype_bits(self.indices))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockSparsePayload:
+    """k (value, in-tile flat index) pairs per (block x block) tile, tiles
+    in row-major grid order — the Pallas block_topk kernel's native
+    output format."""
+
+    values: jax.Array   # (..., nblocks, k)
+    indices: jax.Array  # (..., nblocks, k) int32
+
+    def tree_flatten(self):
+        return (self.values, self.indices), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def bits(self) -> int:
+        nblk, k = (int(s) for s in self.values.shape[-2:])
+        return nblk * k * (_dtype_bits(self.values) + _dtype_bits(self.indices))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LowRankPayload:
+    """Rank-R factors: dense = (left * middle) @ right.T (eigh/SVD style,
+    middle of size r) or (left @ right.T) * middle[0] (PowerSGD, middle a
+    single rescale float)."""
+
+    left: jax.Array    # (..., d0, r)
+    right: jax.Array   # (..., d1, r)
+    middle: jax.Array  # (..., r) eigen/singular values, or (..., 1) scale
+
+    def tree_flatten(self):
+        return (self.left, self.right, self.middle), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def bits(self) -> int:
+        d0, r = (int(s) for s in self.left.shape[-2:])
+        d1 = int(self.right.shape[-2])
+        mid = int(self.middle.shape[-1])
+        return (d0 * r + d1 * r + mid) * _dtype_bits(self.left)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DensePayload:
+    """A dense array shipped as-is. ``count`` is the number of entries
+    charged on the wire and ``indexed`` whether each also ships an index
+    — Bernoulli sparsification stores its (dense-layout) masked values
+    here but is charged its *expected* occupancy int(p * numel), the one
+    documented payload whose measured bits are an expectation rather
+    than a per-draw count (occupancy is a random variate, so a static
+    wire size cannot equal it draw-by-draw)."""
+
+    values: jax.Array
+    count: int = dataclasses.field(metadata=dict(static=True), default=0)
+    indexed: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    def tree_flatten(self):
+        return (self.values,), (self.count, self.indexed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    def bits(self) -> int:
+        per = _dtype_bits(self.values) + (INDEX_BITS if self.indexed else 0)
+        return self.count * per
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DitheredPayload:
+    """Random-dithering wire object: one q-norm float plus, per entry, a
+    sign bit and a quantization level in {0..s}. Levels/signs are stored
+    as (integer-valued) floats for exact reconstruction; ``bits()``
+    charges the paper's encoded width 1 + ceil(log2(s+1)) per entry."""
+
+    norm: jax.Array     # (..., 1)
+    signs: jax.Array    # (..., *shape)
+    levels: jax.Array   # (..., *shape), integer-valued in [0, s]
+    s: int = dataclasses.field(metadata=dict(static=True), default=1)
+    count: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    def tree_flatten(self):
+        return (self.norm, self.signs, self.levels), (self.s, self.count)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def bits(self) -> int:
+        level_bits = max(1, math.ceil(math.log2(self.s + 1)))
+        return _dtype_bits(self.norm) + self.count * (1 + level_bits)
+
+
+def _scatter_flat(values, indices, n: int) -> jax.Array:
+    """Dense (n,) vector from (value, index) pairs; -1/out-of-range
+    indices (payload padding) are dropped. Negative indices must be
+    remapped BEFORE the scatter: jax normalizes them (−1 → n−1) before
+    the bounds check, so mode="drop" alone would overwrite the last
+    entry instead of dropping the padding."""
+    indices = jnp.where(indices < 0, n, indices)
+    return jnp.zeros((n,), values.dtype).at[indices].set(values, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# CompSpec and the base class
+# ---------------------------------------------------------------------------
+
+
+class CompSpec(NamedTuple):
+    """Analytic class parameters of a compressor at a given shape.
+
+    Exactly one of delta (Def 3.3) / omega (Def 3.2) is set; ``bits`` is
+    the analytic uplink size the paper's x-axis charges (clamped to what
+    the payload can actually contain); ``deterministic`` selects the
+    stepsize assumption (3.4 vs 3.5)."""
+
+    delta: Optional[float]
+    omega: Optional[float]
+    bits: int
+    deterministic: bool
 
 
 @dataclasses.dataclass(frozen=True)
 class Compressor:
-    """A compression operator with analytic byte accounting."""
+    """A compression operator as a wire codec with analytic accounting.
+
+    Subclasses implement ``compress``/``decompress``/``spec``; the dense
+    ``__call__`` is always ``decompress(compress(...))``."""
+
+    def compress(self, m: jax.Array, key: Optional[jax.Array] = None):
+        raise NotImplementedError
+
+    def decompress(self, payload, shape) -> jax.Array:
+        raise NotImplementedError
 
     def __call__(self, m: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
+        return self.decompress(self.compress(m, key), m.shape)
+
+    def spec(self, shape) -> CompSpec:
         raise NotImplementedError
 
-    def bits(self, shape: tuple[int, ...]) -> int:
-        raise NotImplementedError
+    def bits(self, shape) -> int:
+        """Analytic wire bits for one application (= spec(shape).bits)."""
+        return self.spec(shape).bits
 
-    # Class parameters (exactly one of these is not None).
-    @property
-    def delta(self) -> Optional[float]:  # contractive parameter
-        return None
 
-    @property
-    def omega(self) -> Optional[float]:  # unbiased variance parameter
-        return None
+def payload_bits(comp: Compressor, shape, dtype=None) -> int:
+    """MEASURED wire bits of one payload: build the payload's structure
+    with ``jax.eval_shape`` (no FLOPs) and ask it. This is the number a
+    real serializer would put on the wire for the ambient dtype —
+    compare with ``comp.spec(shape).bits``, the paper's analytic claim
+    at FLOAT_BITS=64."""
+    if dtype is None:
+        dtype = jnp.result_type(float)
+    m = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+    key = jax.ShapeDtypeStruct((2,), jnp.dtype(jnp.uint32))
+    pay = jax.eval_shape(comp.compress, m, key)
+    return int(pay.bits())
 
-    @property
-    def deterministic(self) -> bool:
-        return self.delta is not None
+
+# ---------------------------------------------------------------------------
+# Registry — string-keyed, self-registering (mirrors the Method registry)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[..., Compressor]] = {}
+
+
+def _canon(name: str) -> str:
+    return name.replace("-", "").replace("_", "").lower()
+
+
+def register_compressor(*names: str):
+    """Decorator: register ``factory(level) -> Compressor`` under every
+    name in ``names`` (spelling-insensitive: "-"/"_"/case ignored).
+    Re-registration overwrites (last wins) so notebooks can hot-patch."""
+
+    def deco(factory):
+        for n in names:
+            _REGISTRY[_canon(n)] = factory
+        return factory
+
+    return deco
+
+
+def available_compressors() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_compressor(family: str, level=None) -> Compressor:
+    """String-keyed compressor factory: ("rankr", 1) -> RankR(1), etc.
+
+    Families: rankr, topk, powersgd, randk, dithering, blocktopk,
+    blocktopkthreshold, natural, identity, zero. ``level`` is the
+    family's knob (rank, k, s, p, ...); identity/zero take none.
+    """
+    fam = _canon(family)
+    if fam not in _REGISTRY:
+        raise ValueError(
+            f"unknown compressor family {family!r}; "
+            f"known: {available_compressors()}")
+    return _REGISTRY[fam](level)
 
 
 # ---------------------------------------------------------------------------
@@ -66,122 +316,135 @@ class Compressor:
 # ---------------------------------------------------------------------------
 
 
-def _topk_dense(m: jax.Array, k: int) -> jax.Array:
-    """Keep the k largest-magnitude entries of ``m`` (any shape), zero rest."""
-    flat = m.reshape(-1)
-    k = min(k, flat.shape[0])
-    _, idx = jax.lax.top_k(jnp.abs(flat), k)
-    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
-    return out.reshape(m.shape)
-
-
 @dataclasses.dataclass(frozen=True)
 class TopK(Compressor):
     """Global Top-K over all entries (paper A.3.3). delta = K / numel.
 
-    ``symmetric=True`` applies the operator to the lower triangle only and
-    mirrors it (the paper's symmetry-preserving variant); K then counts
-    kept lower-triangular entries.
+    ``symmetric=True`` applies the operator to the lower triangle only
+    and mirrors it (the paper's symmetry-preserving variant); K then
+    counts kept lower-triangular entries and the payload contains only
+    the lower-triangular pairs it actually ships.
     """
 
     k: int
     symmetric: bool = False
 
-    def __call__(self, m: jax.Array, key=None) -> jax.Array:
-        if self.symmetric and m.ndim == 2 and m.shape[0] == m.shape[1]:
-            d = m.shape[0]
-            tril = jnp.tril(m)
-            c = _topk_dense(tril, self.k)
+    def _slots(self, shape) -> int:
+        """Entries the payload can meaningfully address (K clamps here:
+        a Top-K larger than the matrix ships the matrix, not more)."""
+        if self.symmetric and len(shape) == 2 and shape[0] == shape[1]:
+            return shape[0] * (shape[0] + 1) // 2
+        return numel(shape)
+
+    def compress(self, m: jax.Array, key=None) -> SparsePayload:
+        sym = self.symmetric and m.ndim == 2 and m.shape[0] == m.shape[1]
+        flat = (jnp.tril(m) if sym else m).reshape(-1)
+        k = min(self.k, self._slots(m.shape))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return SparsePayload(values=flat[idx], indices=idx.astype(jnp.int32))
+
+    def decompress(self, payload: SparsePayload, shape) -> jax.Array:
+        c = _scatter_flat(payload.values, payload.indices,
+                          numel(shape)).reshape(shape)
+        if self.symmetric and len(shape) == 2 and shape[0] == shape[1]:
             return c + c.T - jnp.diag(jnp.diag(c))
-        return _topk_dense(m, self.k)
+        return c
 
-    def bits(self, shape) -> int:
-        # value + (row, col) index per kept entry
-        return self.k * (FLOAT_BITS + INDEX_BITS)
+    def spec(self, shape) -> CompSpec:
+        slots = self._slots(shape)
+        k = min(self.k, slots)  # clamp: no overcount on small problems
+        return CompSpec(delta=k / slots, omega=None,
+                        bits=k * (FLOAT_BITS + INDEX_BITS),
+                        deterministic=True)
 
-    @property
-    def delta(self) -> float:
-        return None  # depends on shape; use delta_for
 
-    def delta_for(self, shape) -> float:
-        numel = 1
-        for s in shape:
-            numel *= s
-        if self.symmetric and len(shape) == 2:
-            numel = shape[0] * (shape[0] + 1) // 2
-        return min(1.0, self.k / numel)
+def _to_tiles(m: jax.Array, b: int):
+    """(d0, d1) -> (n0*n1, b*b) row-major tiles, zero-padded."""
+    d0, d1 = m.shape
+    p0, p1 = (-d0) % b, (-d1) % b
+    mp = jnp.pad(m, ((0, p0), (0, p1)))
+    n0, n1 = mp.shape[0] // b, mp.shape[1] // b
+    return mp.reshape(n0, b, n1, b).transpose(0, 2, 1, 3).reshape(n0 * n1, b * b)
 
-    @property
-    def deterministic(self) -> bool:
-        return True
+
+def _from_tiles(tiles: jax.Array, shape, b: int) -> jax.Array:
+    d0, d1 = shape
+    n0, n1 = -(-d0 // b), -(-d1 // b)
+    out = tiles.reshape(n0, n1, b, b).transpose(0, 2, 1, 3) \
+        .reshape(n0 * b, n1 * b)
+    return out[:d0, :d1]
 
 
 @dataclasses.dataclass(frozen=True)
-class BlockTopK(Compressor):
-    """TPU-native block-local Top-K: keep the top ``k_per_block`` entries of
-    every (b x b) tile. Contractive with delta = k_per_block / b^2 (the
-    contraction inequality holds per tile and the Frobenius norm is
-    separable over tiles). This is the operator the Pallas kernel
-    implements; this version is the pure-jnp reference semantics.
-    """
+class _BlockSparse(Compressor):
+    """Shared decode + accounting for the block-local Top-K family: the
+    payload is per-tile (values, in-tile flat indices) in row-major grid
+    order — the Pallas kernel's native format (kernels/block_topk
+    ``block_topk_payload``). Subclasses supply the selection rule."""
 
     k_per_block: int
     block: int = 128
 
-    def __call__(self, m: jax.Array, key=None) -> jax.Array:
-        d0, d1 = m.shape
-        b = self.block
-        p0, p1 = (-d0) % b, (-d1) % b
-        mp = jnp.pad(m, ((0, p0), (0, p1)))
-        n0, n1 = mp.shape[0] // b, mp.shape[1] // b
-        tiles = mp.reshape(n0, b, n1, b).transpose(0, 2, 1, 3).reshape(n0 * n1, b * b)
-        k = min(self.k_per_block, b * b)
-        _, idx = jax.lax.top_k(jnp.abs(tiles), k)
-        vals = jnp.take_along_axis(tiles, idx, axis=1)
-        out = jnp.zeros_like(tiles)
-        out = jax.vmap(lambda o, i, v: o.at[i].set(v))(out, idx, vals)
-        out = out.reshape(n0, n1, b, b).transpose(0, 2, 1, 3).reshape(mp.shape)
-        return out[:d0, :d1]
+    def _k(self) -> int:
+        return min(self.k_per_block, self.block * self.block)
 
-    def bits(self, shape) -> int:
+    def decompress(self, payload: BlockSparsePayload, shape) -> jax.Array:
+        b = self.block
+        nblk = payload.values.shape[-2]
+        # -1 padding -> out-of-range BEFORE the scatter (jax normalizes
+        # negative indices ahead of the mode="drop" bounds check)
+        idx = jnp.where(payload.indices < 0, b * b, payload.indices)
+        out = jnp.zeros((nblk, b * b), payload.values.dtype)
+        out = jax.vmap(lambda o, i, v: o.at[i].set(v, mode="drop"))(
+            out, idx, payload.values)
+        return _from_tiles(out, shape, b)
+
+    def spec(self, shape) -> CompSpec:
         b = self.block
         nblk = -(-shape[0] // b) * -(-shape[1] // b)
-        return nblk * self.k_per_block * (FLOAT_BITS + INDEX_BITS)
-
-    @property
-    def delta(self) -> float:
-        return self.k_per_block / (self.block * self.block)
-
-    @property
-    def deterministic(self) -> bool:
-        return True
+        return CompSpec(delta=self._k() / (b * b), omega=None,
+                        bits=nblk * self._k() * (FLOAT_BITS + INDEX_BITS),
+                        deterministic=True)
 
 
 @dataclasses.dataclass(frozen=True)
-class BlockTopKThreshold(Compressor):
+class BlockTopK(_BlockSparse):
+    """TPU-native block-local Top-K: keep the top ``k_per_block`` entries
+    of every (b x b) tile. Contractive with delta = k_per_block / b^2
+    (the contraction inequality holds per tile and the Frobenius norm is
+    separable over tiles). This class is the pure-jnp reference
+    semantics (sort-based selection)."""
+
+    def compress(self, m: jax.Array, key=None) -> BlockSparsePayload:
+        tiles = _to_tiles(m, self.block)
+        _, idx = jax.lax.top_k(jnp.abs(tiles), self._k())
+        vals = jnp.take_along_axis(tiles, idx, axis=1)
+        return BlockSparsePayload(values=vals, indices=idx.astype(jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockTopKThreshold(_BlockSparse):
     """Block-local Top-K via threshold bisection — the pure-jnp mirror of
     the Pallas kernel (kernels/block_topk). Selection by ~32 rounds of
     compare+count instead of a sort: O(iters * n) vector ops vs
     O(n log n) scalar-ish sort work, which matters when the compressor
     runs inside every optimizer step (second_order/fednl_precond).
-    Keeps count in [k, k + #ties] per tile; same contractive class,
-    delta = k_per_block / block^2."""
 
-    k_per_block: int
-    block: int = 128
+    Keeps EXACTLY k entries per tile: every entry strictly above the
+    bisection bracket, then boundary ties (entries inside the final
+    [lo, hi) bracket, equal to within the f32 bisection resolution) in
+    flat order until k slots fill. This preserves the Def 3.3
+    contraction at delta = k_per_block / block^2 even when a tie
+    cluster spans the k-th position — a threshold-only cut (ax >= hi)
+    can keep arbitrarily fewer than k there and break the inequality
+    ``spec()`` reports."""
+
     iters: int = 32
 
-    def __call__(self, m: jax.Array, key=None) -> jax.Array:
-        d0, d1 = m.shape
-        b = self.block
-        p0, p1 = (-d0) % b, (-d1) % b
-        mp = jnp.pad(m, ((0, p0), (0, p1)))
-        n0, n1 = mp.shape[0] // b, mp.shape[1] // b
-        tiles = mp.reshape(n0, b, n1, b).transpose(0, 2, 1, 3) \
-            .reshape(n0 * n1, b * b)
-        ax = jnp.abs(tiles).astype(jnp.float32)
-        k = min(self.k_per_block, b * b)
-
+    def _bracket(self, ax: jax.Array):
+        """Per-tile bisection bracket (lo, hi) on |x| with
+        count(ax >= hi) <= k <= count(ax >= lo)."""
+        k = self._k()
         hi = jnp.max(ax, axis=1)
         lo = jnp.zeros_like(hi)
 
@@ -192,23 +455,30 @@ class BlockTopKThreshold(Compressor):
             too_many = cnt > k
             return jnp.where(too_many, mid, lo), jnp.where(too_many, hi, mid)
 
-        lo, hi = jax.lax.fori_loop(0, self.iters, body, (lo, hi))
-        out = jnp.where(ax >= hi[:, None], tiles, jnp.zeros_like(tiles))
-        out = out.reshape(n0, n1, b, b).transpose(0, 2, 1, 3).reshape(mp.shape)
-        return out[:d0, :d1]
+        return jax.lax.fori_loop(0, self.iters, body, (lo, hi))
 
-    def bits(self, shape) -> int:
-        b = self.block
-        nblk = -(-shape[0] // b) * -(-shape[1] // b)
-        return nblk * self.k_per_block * (FLOAT_BITS + INDEX_BITS)
-
-    @property
-    def delta(self) -> float:
-        return self.k_per_block / (self.block * self.block)
-
-    @property
-    def deterministic(self) -> bool:
-        return True
+    def compress(self, m: jax.Array, key=None) -> BlockSparsePayload:
+        tiles = _to_tiles(m, self.block)
+        nblk, bb = tiles.shape
+        k = self._k()
+        ax = jnp.abs(tiles).astype(jnp.float32)
+        lo, hi = self._bracket(ax)
+        strict = ax >= hi[:, None]                      # count <= k
+        tie = (ax >= lo[:, None]) & ~strict             # strict+tie >= k
+        # sort-free compaction (cumsum + scatter, O(bb) like the Pallas
+        # kernel): strict survivors first, then ties in flat order; tie
+        # overflow beyond k and non-survivors scatter out of range
+        n_strict = jnp.sum(strict, axis=1, keepdims=True)
+        slot = jnp.where(
+            strict, jnp.cumsum(strict, axis=1) - 1,
+            jnp.where(tie, n_strict + jnp.cumsum(tie, axis=1) - 1, k))
+        rows = jnp.arange(nblk)[:, None]
+        vals = jnp.zeros((nblk, k), tiles.dtype) \
+            .at[rows, slot].set(tiles, mode="drop")
+        idx = jnp.full((nblk, k), -1, jnp.int32) \
+            .at[rows, slot].set(jnp.arange(bb, dtype=jnp.int32)[None, :],
+                                mode="drop")
+        return BlockSparsePayload(values=vals, indices=idx)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,39 +491,34 @@ class RankR(Compressor):
     exactly A.3.2's symmetric case (output sum sigma_i u_i u_i^T) and is
     numerically robust where batched divide-and-conquer SVD (gesdd) can
     emit NaNs inside fused XLA:CPU programs. ``symmetric=False`` uses the
-    general SVD.
+    general SVD. The payload ships both factors plus the R values — the
+    paper's sigma + u + v accounting (the symmetric case could ship u
+    once; we charge the paper's number).
     """
 
     r: int
     symmetric: bool = True
 
-    def __call__(self, m: jax.Array, key=None) -> jax.Array:
+    def compress(self, m: jax.Array, key=None) -> LowRankPayload:
         if self.symmetric:
             sym = 0.5 * (m + m.T)
             lam, q = jnp.linalg.eigh(sym)
             r = min(self.r, lam.shape[0])
             _, idx = jax.lax.top_k(jnp.abs(lam), r)
-            lam_r = lam[idx]
-            q_r = q[:, idx]
-            return (q_r * lam_r) @ q_r.T
+            return LowRankPayload(left=q[:, idx], right=q[:, idx],
+                                  middle=lam[idx])
         u, s, vt = jnp.linalg.svd(m, full_matrices=False)
         r = min(self.r, s.shape[0])
-        return (u[:, :r] * s[:r]) @ vt[:r, :]
+        return LowRankPayload(left=u[:, :r], right=vt[:r, :].T, middle=s[:r])
 
-    def bits(self, shape) -> int:
-        # R singular triples: sigma + u (d) + v (d)
-        return self.r * FLOAT_BITS * (1 + shape[0] + shape[1])
+    def decompress(self, payload: LowRankPayload, shape) -> jax.Array:
+        return (payload.left * payload.middle) @ payload.right.T
 
-    def delta_for(self, shape) -> float:
-        return min(1.0, self.r / min(shape))
-
-    @property
-    def delta(self) -> float:
-        return None  # shape dependent; use delta_for
-
-    @property
-    def deterministic(self) -> bool:
-        return True
+    def spec(self, shape) -> CompSpec:
+        r = min(self.r, min(shape))
+        return CompSpec(delta=r / min(shape), omega=None,
+                        bits=r * FLOAT_BITS * (1 + shape[0] + shape[1]),
+                        deterministic=True)
 
 
 def _orthonormalize(q: jax.Array) -> jax.Array:
@@ -268,81 +533,73 @@ class PowerSGD(Compressor):
     iteration (Vogels et al. 2019; benchmarked by the paper in Fig. 3/5).
 
     Scaled per Definition 3.3's remark so ||C(M)||_F <= ||M||_F always
-    holds; with enough iterations this approaches RankR. Deterministic
-    given the fixed seed for the starting subspace.
+    holds; with enough iterations this approaches RankR (the reported
+    delta is the Rank-R bound — conservative: one power iteration
+    already dominates a random subspace's energy capture). Deterministic
+    given the fixed seed for the starting subspace. The payload ships
+    the two factors plus the contraction-preserving rescale float.
     """
 
     r: int
     iters: int = 2
     seed: int = 0
 
-    def __call__(self, m: jax.Array, key=None) -> jax.Array:
+    def compress(self, m: jax.Array, key=None) -> LowRankPayload:
         d1 = m.shape[1]
-        q = jax.random.normal(jax.random.PRNGKey(self.seed), (d1, self.r), m.dtype)
+        q = jax.random.normal(jax.random.PRNGKey(self.seed), (d1, self.r),
+                              m.dtype)
         q = _orthonormalize(q)
         for _ in range(self.iters):
             p = _orthonormalize(m @ q)          # (d0, r)
             q = _orthonormalize(m.T @ p)        # (d1, r)
         p = m @ q                                # un-normalized left factor
-        approx = p @ q.T
         # contraction-preserving rescale (Def 3.3 remark)
         num = jnp.linalg.norm(m)
-        den = jnp.linalg.norm(approx)
+        den = jnp.linalg.norm(p @ q.T)
         scale = jnp.minimum(1.0, num / jnp.maximum(den, 1e-30))
-        return approx * scale
+        return LowRankPayload(left=p, right=q, middle=scale[None])
 
-    def bits(self, shape) -> int:
-        return self.r * FLOAT_BITS * (shape[0] + shape[1])
+    def decompress(self, payload: LowRankPayload, shape) -> jax.Array:
+        return (payload.left @ payload.right.T) * payload.middle[0]
 
-    def delta_for(self, shape) -> float:
-        # conservative: one power iteration already dominates Rank-R energy
-        # capture of a random subspace; we report the Rank-R bound.
-        return min(1.0, self.r / min(shape))
-
-    @property
-    def deterministic(self) -> bool:
-        return True
+    def spec(self, shape) -> CompSpec:
+        r = min(self.r, min(shape))
+        return CompSpec(delta=r / min(shape), omega=None,
+                        bits=self.r * FLOAT_BITS * (shape[0] + shape[1])
+                        + FLOAT_BITS,  # + the rescale float
+                        deterministic=True)
 
 
 @dataclasses.dataclass(frozen=True)
 class Identity(Compressor):
     """C = I (classical Newton's communication)."""
 
-    def __call__(self, m, key=None):
-        return m
+    def compress(self, m: jax.Array, key=None) -> DensePayload:
+        return DensePayload(values=m, count=numel(m.shape), indexed=False)
 
-    def bits(self, shape) -> int:
-        numel = 1
-        for s in shape:
-            numel *= s
-        return numel * FLOAT_BITS
+    def decompress(self, payload: DensePayload, shape) -> jax.Array:
+        return payload.values.reshape(shape)
 
-    @property
-    def delta(self) -> float:
-        return 1.0
-
-    @property
-    def deterministic(self) -> bool:
-        return True
+    def spec(self, shape) -> CompSpec:
+        return CompSpec(delta=1.0, omega=None,
+                        bits=numel(shape) * FLOAT_BITS, deterministic=True)
 
 
 @dataclasses.dataclass(frozen=True)
 class Zero(Compressor):
-    """C = 0 (Newton-Zero / Newton-Star corner of the Newton triangle)."""
+    """C = 0 (Newton-Zero / Newton-Star corner of the Newton triangle).
+    The payload is empty — zero measured bits by construction."""
 
-    def __call__(self, m, key=None):
-        return jnp.zeros_like(m)
+    def compress(self, m: jax.Array, key=None) -> SparsePayload:
+        return SparsePayload(values=m.reshape(-1)[:0],
+                             indices=jnp.zeros((0,), jnp.int32))
 
-    def bits(self, shape) -> int:
-        return 0
+    def decompress(self, payload: SparsePayload, shape) -> jax.Array:
+        return _scatter_flat(payload.values, payload.indices,
+                             numel(shape)).reshape(shape)
 
-    @property
-    def delta(self) -> float:
-        return 0.0
-
-    @property
-    def deterministic(self) -> bool:
-        return True
+    def spec(self, shape) -> CompSpec:
+        return CompSpec(delta=0.0, omega=None, bits=0, deterministic=True)
 
 
 # ---------------------------------------------------------------------------
@@ -352,37 +609,32 @@ class Zero(Compressor):
 
 @dataclasses.dataclass(frozen=True)
 class RandK(Compressor):
-    """Rand-K with d^2/K rescale (paper A.3.4). omega = numel/K - 1."""
+    """Rand-K with numel/K rescale (paper A.3.4). omega = numel/K - 1.
+    The rescale is folded into the payload values (the server never
+    needs K separately)."""
 
     k: int
     symmetric: bool = False
 
-    def __call__(self, m: jax.Array, key: jax.Array = None) -> jax.Array:
+    def compress(self, m: jax.Array, key: jax.Array = None) -> SparsePayload:
         assert key is not None, "RandK is randomized; pass a PRNG key"
         flat = m.reshape(-1)
         n = flat.shape[0]
         k = min(self.k, n)
         idx = jax.random.choice(key, n, (k,), replace=False)
-        mask = jnp.zeros((n,), m.dtype).at[idx].set(1.0)
-        out = flat * mask * (n / k)
-        return out.reshape(m.shape)
+        return SparsePayload(values=flat[idx] * (n / k),
+                             indices=idx.astype(jnp.int32))
 
-    def bits(self, shape) -> int:
-        return self.k * (FLOAT_BITS + INDEX_BITS)
+    def decompress(self, payload: SparsePayload, shape) -> jax.Array:
+        return _scatter_flat(payload.values, payload.indices,
+                             numel(shape)).reshape(shape)
 
-    def omega_for(self, shape) -> float:
-        numel = 1
-        for s in shape:
-            numel *= s
-        return numel / self.k - 1.0
-
-    @property
-    def omega(self) -> float:
-        return None  # shape dependent
-
-    @property
-    def deterministic(self) -> bool:
-        return False
+    def spec(self, shape) -> CompSpec:
+        n = numel(shape)
+        k = min(self.k, n)  # clamp: no overcount on small problems
+        return CompSpec(delta=None, omega=n / k - 1.0,
+                        bits=k * (FLOAT_BITS + INDEX_BITS),
+                        deterministic=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -394,7 +646,7 @@ class RandomDithering(Compressor):
     s: int
     q: float = 2.0
 
-    def __call__(self, x: jax.Array, key: jax.Array = None) -> jax.Array:
+    def compress(self, x: jax.Array, key: jax.Array = None) -> DitheredPayload:
         assert key is not None
         norm = jnp.linalg.norm(x.reshape(-1), ord=self.q)
         norm = jnp.maximum(norm, 1e-30)
@@ -402,58 +654,110 @@ class RandomDithering(Compressor):
         low = jnp.floor(y)
         prob = y - low
         bump = jax.random.bernoulli(key, prob, x.shape).astype(x.dtype)
-        levels = (low + bump) / self.s
-        out = jnp.sign(x) * norm * levels
-        return jnp.where(norm > 1e-29, out, jnp.zeros_like(x))
+        return DitheredPayload(norm=norm[None], signs=jnp.sign(x),
+                               levels=low + bump, s=self.s,
+                               count=numel(x.shape))
 
-    def bits(self, shape) -> int:
-        numel = 1
-        for s_ in shape:
-            numel *= s_
-        import math
+    def decompress(self, payload: DitheredPayload, shape) -> jax.Array:
+        norm = payload.norm[0]
+        levels = payload.levels / self.s
+        out = payload.signs * norm * levels
+        return jnp.where(norm > 1e-29, out, jnp.zeros_like(out)).reshape(shape)
 
+    def spec(self, shape) -> CompSpec:
+        n = numel(shape)
         level_bits = max(1, math.ceil(math.log2(self.s + 1)))
-        return FLOAT_BITS + numel * (1 + level_bits)  # norm + sign+level per entry
-
-    def omega_for(self, shape) -> float:
-        import math
-
-        numel = 1
-        for s_ in shape:
-            numel *= s_
-        return min(numel / self.s**2, math.sqrt(numel) / self.s)
-
-    @property
-    def deterministic(self) -> bool:
-        return False
+        return CompSpec(
+            delta=None,
+            omega=min(n / self.s**2, math.sqrt(n) / self.s),
+            bits=FLOAT_BITS + n * (1 + level_bits),  # norm + sign+level/entry
+            deterministic=False)
 
 
 @dataclasses.dataclass(frozen=True)
 class NaturalSparsification(Compressor):
     """Bernoulli(p) sparsification with 1/p rescale — unbiased,
     omega = 1/p - 1. Used by FedNL-BC's uplink gradient scheme analysis
-    and as a generic cheap unbiased operator."""
+    and as a generic cheap unbiased operator. Payload occupancy is a
+    random variate; measured bits charge the expectation int(p*numel)
+    (see DensePayload)."""
 
     p: float
 
-    def __call__(self, x: jax.Array, key: jax.Array = None) -> jax.Array:
+    def compress(self, x: jax.Array, key: jax.Array = None) -> DensePayload:
         assert key is not None
         mask = jax.random.bernoulli(key, self.p, x.shape).astype(x.dtype)
-        return x * mask / self.p
+        return DensePayload(values=x * mask / self.p,
+                            count=int(self.p * numel(x.shape)), indexed=True)
 
-    def bits(self, shape) -> int:
-        numel = 1
-        for s in shape:
-            numel *= s
-        return int(self.p * numel) * (FLOAT_BITS + INDEX_BITS)
+    def decompress(self, payload: DensePayload, shape) -> jax.Array:
+        return payload.values.reshape(shape)
 
-    @property
-    def omega(self) -> float:
-        return 1.0 / self.p - 1.0
+    def spec(self, shape) -> CompSpec:
+        return CompSpec(
+            delta=None, omega=1.0 / self.p - 1.0,
+            bits=int(self.p * numel(shape)) * (FLOAT_BITS + INDEX_BITS),
+            deterministic=False)
 
-    @property
-    def deterministic(self) -> bool:
-        return False
+
+# ---------------------------------------------------------------------------
+# Registry entries (string key -> factory(level))
+# ---------------------------------------------------------------------------
+
+
+@register_compressor("rankr", "rank")
+def _make_rankr(level):
+    return RankR(int(level))
+
+
+@register_compressor("topk")
+def _make_topk(level):
+    return TopK(k=int(level))
+
+
+@register_compressor("topk-sym")
+def _make_topk_sym(level):
+    return TopK(k=int(level), symmetric=True)
+
+
+@register_compressor("powersgd")
+def _make_powersgd(level):
+    return PowerSGD(r=int(level), iters=2)
+
+
+@register_compressor("randk")
+def _make_randk(level):
+    return RandK(k=int(level))
+
+
+@register_compressor("dithering", "random-dithering")
+def _make_dithering(level):
+    return RandomDithering(s=int(level))
+
+
+@register_compressor("blocktopk")
+def _make_blocktopk(level):
+    return BlockTopK(k_per_block=int(level))
+
+
+@register_compressor("blocktopk-threshold")
+def _make_blocktopk_threshold(level):
+    return BlockTopKThreshold(k_per_block=int(level))
+
+
+@register_compressor("natural")
+def _make_natural(level):
+    return NaturalSparsification(p=float(level))
+
+
+@register_compressor("identity", "none")
+def _make_identity(level):
+    return Identity()
+
+
+@register_compressor("zero")
+def _make_zero(level):
+    return Zero()
 
 
 # ---------------------------------------------------------------------------
@@ -469,33 +773,25 @@ def alpha_for(comp: Compressor, shape, rule: str = "auto") -> float:
     rule = 'unbiased'   -> alpha = 1/(omega+1)     (Assumption 3.5)
     rule = 'auto'       -> 'one' for contractive, 'unbiased' otherwise
     """
-    delta = comp.delta
-    if delta is None and hasattr(comp, "delta_for"):
-        delta = comp.delta_for(shape)
-    omega = comp.omega
-    if omega is None and hasattr(comp, "omega_for"):
-        omega = comp.omega_for(shape)
-
+    sp = comp.spec(shape)
     if rule == "auto":
-        rule = "one" if comp.deterministic else "unbiased"
+        rule = "one" if sp.deterministic else "unbiased"
     if rule == "one":
         return 1.0
     if rule == "contract":
-        assert delta is not None
-        return 1.0 - (1.0 - delta) ** 0.5
+        assert sp.delta is not None
+        return 1.0 - (1.0 - sp.delta) ** 0.5
     if rule == "unbiased":
-        assert omega is not None
-        return 1.0 / (omega + 1.0)
+        assert sp.omega is not None
+        return 1.0 / (sp.omega + 1.0)
     raise ValueError(rule)
 
 
 def ab_constants(comp: Compressor, shape, alpha: float) -> tuple[float, float]:
     """(A, B) of eq. (5), selecting the assumption matching (comp, alpha)."""
-    delta = comp.delta
-    if delta is None and hasattr(comp, "delta_for"):
-        delta = comp.delta_for(shape)
-    if comp.deterministic:
+    sp = comp.spec(shape)
+    if sp.deterministic:
         if alpha == 1.0:
-            return delta / 4.0, 6.0 / delta - 3.5
+            return sp.delta / 4.0, 6.0 / sp.delta - 3.5
         return alpha**2, alpha
     return alpha, alpha

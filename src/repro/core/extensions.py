@@ -69,7 +69,7 @@ class StochasticFedNL(MethodBase):
         grads = self.grad_fn(state.x)
         hesses = self.hess_fn(state.x, k_h)          # noisy local Hessians
         diff = hesses - state.h_local
-        s_i = jax.vmap(self.comp)(diff, silo_keys)
+        s_i = self._compress_uplink(diff, silo_keys)
         l_i = jax.vmap(frob_norm)(diff)
 
         grad = jnp.mean(grads, axis=0)
@@ -85,7 +85,8 @@ class StochasticFedNL(MethodBase):
         )
 
     def bits_per_round(self, d: int) -> int:
-        """Uplink per device: gradient + S_i + l_i (as FedNL Option 2)."""
+        """Uplink per device: gradient + S_i + l_i (as FedNL Option 2).
+        Measured counterpart comes from MethodBase (same layout)."""
         return d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
 
 
@@ -154,7 +155,8 @@ class FedNLPPBC(MethodBase):
         # server: Newton-type step from aggregates, then compressed broadcast
         h_eff = state.h_global + state.l_global * eye
         x_new = solve_newton_system(h_eff, state.g_global)
-        s_model = self.comp_m(x_new - state.z, k_m)
+        down_payload = self.comp_m.compress(x_new - state.z, k_m)
+        s_model = self.comp_m.decompress(down_payload, (d,))
         z_new = state.z + self.eta * s_model
 
         # participation
@@ -166,7 +168,7 @@ class FedNLPPBC(MethodBase):
         hess_z = self.hess_fn(z_new)
         grads_z = self.grad_fn(z_new)
         diff = hess_z - state.h_local
-        s_i = jax.vmap(self.comp)(diff, silo_keys)
+        s_i = self._compress_uplink(diff, silo_keys)
         h_upd = state.h_local + self.alpha * s_i
         l_upd = jax.vmap(frob_norm)(h_upd - hess_z)
         g_upd = jax.vmap(lambda h, l, gi: (h + l * eye) @ z_new - gi)(
@@ -189,9 +191,18 @@ class FedNLPPBC(MethodBase):
         )
 
     def bits_per_round(self, d: int) -> tuple[int, int]:
-        """(uplink per active silo, downlink broadcast)."""
+        """(uplink per active silo, downlink broadcast). Analytic."""
         up = self.comp.bits((d, d)) + FLOAT_BITS + d * FLOAT_BITS
         down = self.comp_m.bits((d,))
+        return up, down
+
+    def measured_bits_per_round(self, d: int) -> tuple[int, int]:
+        """Overrides the MethodBase default: bidirectional wire."""
+        from .compressors import canonical_float_bits, payload_bits
+
+        fb = canonical_float_bits()
+        up = payload_bits(self.comp, (d, d)) + fb + d * fb
+        down = payload_bits(self.comp_m, (d,))
         return up, down
 
 

@@ -16,9 +16,11 @@ One communication round (paper Sec. 3):
 
 The implementation is a pure jittable step over *stacked* per-silo state,
 so the same code runs (a) single-process via vmap, and (b) sharded over a
-mesh axis via shard_map (see core/federated.py). Communication accounting
-(uplink bits per device per round) is analytic, matching the paper's
-x-axis.
+mesh axis via shard_map (see core/federated.py). The device uplink is an
+explicit wire object: each silo builds a compressed ``Payload`` and the
+"server" reconstructs the dense S_i from it, so communicated bits are
+*measured* from the payload structure (``measured_bits_per_round``) next
+to the paper's analytic accounting (``bits_per_round``).
 """
 
 from __future__ import annotations
@@ -107,7 +109,8 @@ class FedNL(MethodBase):
         hesses = self.hess_fn(state.x)                    # (n, d, d)
 
         diff = hesses - state.h_local                     # (n, d, d)
-        s_i = jax.vmap(self.comp)(diff, silo_keys)        # compressed
+        # devices uplink payloads; the server decompresses to dense S_i
+        s_i = self._compress_uplink(diff, silo_keys)
         l_i = jax.vmap(frob_norm)(diff)                   # (n,)
 
         grad = self._mean(grads)
@@ -130,10 +133,14 @@ class FedNL(MethodBase):
     # -- communication accounting ----------------------------------------------
 
     def bits_per_round(self, d: int) -> int:
-        """Uplink bits per device per round: gradient + S_i + l_i."""
+        """ANALYTIC uplink bits per device per round: gradient + S_i + l_i
+        (the paper's x-axis, FLOAT_BITS-denominated)."""
         from .compressors import FLOAT_BITS
 
         return d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
+
+    # measured_bits_per_round comes from MethodBase: payload structure
+    # (jax.eval_shape) + (d + 1) ambient floats — the same layout.
 
     def init_bits(self, d: int) -> int:
         """The paper counts the cost of shipping H_i^0 = hess(x0) once."""

@@ -89,7 +89,7 @@ class FedNLBC(MethodBase):
 
         hess_z = self.hess_fn(state.z)
         diff = hess_z - state.h_local
-        s_i = jax.vmap(self.comp)(diff, silo_keys)
+        s_i = self._compress_uplink(diff, silo_keys)
         l_i = jax.vmap(frob_norm)(diff)
 
         # --- server --------------------------------------------------------
@@ -104,7 +104,10 @@ class FedNLBC(MethodBase):
         h_local = state.h_local + self.alpha * s_i
         h_global = state.h_global + self.alpha * jnp.mean(s_i, axis=0)
 
-        s_model = self.comp_m(x_new - state.z, k_m)
+        # downlink: the server broadcasts the compressed model increment
+        # as a wire payload; every device decompresses and learns z
+        down_payload = self.comp_m.compress(x_new - state.z, k_m)
+        s_model = self.comp_m.decompress(down_payload, (d,))
         z_new = state.z + self.eta * s_model
 
         xi_new = jax.random.bernoulli(k_xi, self.p)
@@ -113,9 +116,20 @@ class FedNLBC(MethodBase):
                             xi_new, x_new, key, state.step + 1)
 
     def bits_per_round(self, d: int) -> tuple[float, int]:
-        """(expected uplink bits per device, downlink bits)."""
+        """(expected uplink bits per device, downlink bits). Analytic."""
         up = self.p * d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
         down = self.comp_m.bits((d,)) + 1  # model increment + xi bit
+        return up, down
+
+    def measured_bits_per_round(self, d: int) -> tuple[float, int]:
+        """Measured counterpart (overrides the MethodBase default: this
+        wire is bidirectional): uplink/downlink payload structure sizes
+        via jax.eval_shape over both compressors' payloads."""
+        from .compressors import canonical_float_bits, payload_bits
+
+        fb = canonical_float_bits()
+        up = self.p * d * fb + payload_bits(self.comp, (d, d)) + fb
+        down = payload_bits(self.comp_m, (d,)) + 1
         return up, down
 
 

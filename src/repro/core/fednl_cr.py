@@ -54,7 +54,7 @@ class FedNLCR(MethodBase):
         grads = self.grad_fn(state.x)
         hesses = self.hess_fn(state.x)
         diff = hesses - state.h_local
-        s_i = jax.vmap(self.comp)(diff, silo_keys)
+        s_i = self._compress_uplink(diff, silo_keys)
         l_i = jax.vmap(frob_norm)(diff)
 
         grad = jnp.mean(grads, axis=0)

@@ -59,7 +59,7 @@ class FedNLLS(MethodBase):
         grads = self.grad_fn(state.x)
         hesses = self.hess_fn(state.x)
         diff = hesses - state.h_local
-        s_i = jax.vmap(self.comp)(diff, silo_keys)
+        s_i = self._compress_uplink(diff, silo_keys)
 
         grad = jnp.mean(grads, axis=0)
         h_eff = project_psd(state.h_global, self.mu)

@@ -94,7 +94,7 @@ class FedNLPP(MethodBase):
         grads_new = self.grad_fn(x_new)
 
         diff = hess_new - state.h_local
-        s_i = jax.vmap(self.comp)(diff, silo_keys)
+        s_i = self._compress_uplink(diff, silo_keys)
         h_upd = state.h_local + self.alpha * s_i
         l_upd = jax.vmap(frob_norm)(h_upd - hess_new)
         eye = jnp.eye(d, dtype=state.x.dtype)
@@ -118,7 +118,8 @@ class FedNLPP(MethodBase):
                             h_global, l_global, g_global, x_new, key, state.step + 1)
 
     def bits_per_round(self, d: int) -> int:
-        """Per *active* device: S_i + (l diff) + (g diff)."""
+        """Per *active* device: S_i + (l diff) + (g diff). Analytic; the
+        measured counterpart comes from MethodBase (same layout)."""
         return self.comp.bits((d, d)) + FLOAT_BITS + d * FLOAT_BITS
 
 

@@ -72,14 +72,42 @@ def scan_rounds(method, state, num_rounds: int):
 
 
 class MethodBase:
-    """Mixin providing the one true ``run`` driver.
+    """Mixin providing the one true ``run`` driver plus the shared
+    payload wire helpers.
 
     Subclasses implement init/step/bits_per_round; ``run`` is the scan
-    loop every algorithm module used to duplicate.
+    loop every algorithm module used to duplicate, and
+    ``_compress_uplink`` / ``measured_bits_per_round`` are the payload
+    round-trip and measured accounting every compressed method shares.
     """
 
     traj_field: str = "x"
     silo_fields: tuple = ("h_local",)
+
+    def _compress_uplink(self, diff, silo_keys):
+        """The device -> server wire for stacked Hessian diffs: each
+        silo compresses its (d, d) diff to a payload; the server
+        decompresses back to dense S_i. One vmapped round-trip, shared
+        by every compressed method's ``step``."""
+        dec = lambda p: self.comp.decompress(p, diff.shape[1:])
+        return jax.vmap(dec)(jax.vmap(self.comp.compress)(diff, silo_keys))
+
+    def measured_bits_per_round(self, d: int):
+        """MEASURED per-round wire bits: the compressor's actual payload
+        structure (via jax.eval_shape) plus the (d + 1) uncompressed
+        floats every single-uplink FedNL variant ships (gradient-sized
+        vector + one scalar), at the ambient float width — matches the
+        analytic ``bits_per_round`` layout of FedNL/PP/CR/LS/Stochastic
+        under x64. Methods with a different wire layout (FedNL-BC,
+        FedNL-PPBC) override. Payload-free methods (Newton references)
+        return the analytic number: their wire IS dense FLOAT_BITS
+        floats, so the claim equals the wire count by construction."""
+        comp = getattr(self, "comp", None)
+        if comp is None:
+            return self.bits_per_round(d)
+        from ..core.compressors import canonical_float_bits, payload_bits
+
+        return payload_bits(comp, (d, d)) + (d + 1) * canonical_float_bits()
 
     def run(self, x0, n, num_rounds, *args, seed: int = 0, **init_kw):
         """Run ``num_rounds`` communication rounds from ``x0``.
@@ -137,9 +165,10 @@ def make_method(name: str, oracles: Oracles, compressor=None, **params):
             f"unknown method {name!r}; available: {available_methods()}"
         ) from None
     for k, v in params.items():
-        # declarative compressor params: ("topk", 16) -> TopK(k=16)
+        # declarative compressor params: ("topk", 16) -> TopK(k=16),
+        # resolved through the compressor registry in core.compressors
         if k.endswith("compressor") and isinstance(v, tuple):
-            from .sweep import build_compressor
+            from ..core.compressors import make_compressor
 
-            params[k] = build_compressor(*v)
+            params[k] = make_compressor(*v)
     return factory(oracles, compressor, **params)

@@ -1,10 +1,13 @@
 """Tidy-record emission and communication accounting for sweep results.
 
 The paper's x-axis is cumulative communicated bits per node; every cell
-of a sweep carries an analytic bits curve (``bits_curve``) next to its
-gap curve so figure code reduces to "plot records". ``records`` flattens
-a sweep into a list of plain dicts (one row per (cell, seed, round)) —
-trivially convertible to CSV or a dataframe.
+of a sweep carries an analytic bits curve (``bits_curve``) AND a
+measured one (``measured_bits_curve`` — per-round wire sizes derived
+from the compressor payload structure via ``measured_bits_per_round``)
+next to its gap curve, so figure code reduces to "plot records" and a
+divergence between claim and wire is visible per row. ``records``
+flattens a sweep into a list of plain dicts (one row per
+(cell, seed, round)) — trivially convertible to CSV or a dataframe.
 """
 
 from __future__ import annotations
@@ -26,6 +29,24 @@ def uplink_bits_per_round(method, d: int) -> float:
     return float(b)
 
 
+def measured_bits_per_round(method, d: int) -> float:
+    """Total per-round communication as MEASURED from the method's
+    payload structure (``method.measured_bits_per_round``, built on
+    ``jax.eval_shape`` over the compressor payloads). For methods
+    without payload accounting (uncompressed baselines/references) the
+    analytic number is returned: their wire is dense FLOAT_BITS floats,
+    so claim == wire by construction, not by measurement — for
+    compressed methods the two columns are independent and a divergence
+    is a real claim-vs-wire gap."""
+    fn = getattr(method, "measured_bits_per_round", None)
+    if fn is None:
+        return uplink_bits_per_round(method, d)
+    b = fn(d)
+    if isinstance(b, tuple):
+        return float(sum(b))
+    return float(b)
+
+
 def init_bits(method, d: int) -> float:
     """One-time setup cost (e.g. shipping H_i^0); 0 when undefined."""
     fn = getattr(method, "init_bits", None)
@@ -35,6 +56,14 @@ def init_bits(method, d: int) -> float:
 def bits_curve(method, d: int, num_rounds: int) -> np.ndarray:
     """(num_rounds+1,) cumulative bits per node, paper accounting."""
     per = uplink_bits_per_round(method, d)
+    return init_bits(method, d) + per * np.arange(num_rounds + 1)
+
+
+def measured_bits_curve(method, d: int, num_rounds: int) -> np.ndarray:
+    """(num_rounds+1,) cumulative MEASURED bits per node: per-round wire
+    sizes from the payload structure; the one-time init cost stays the
+    analytic dense-symmetric ship (there is no payload for it)."""
+    per = measured_bits_per_round(method, d)
     return init_bits(method, d) + per * np.arange(num_rounds + 1)
 
 
@@ -53,8 +82,13 @@ def rounds_to_accuracy(gap_curve, target: float) -> int:
 
 
 def cell_records(cell) -> list[dict]:
-    """One tidy row per (seed, round) for a finished ``CellResult``."""
+    """One tidy row per (seed, round) for a finished ``CellResult``.
+    ``bits`` is the paper's analytic curve; ``bits_measured`` the wire
+    sizes measured from the payload structure."""
     spec = cell.spec
+    measured = getattr(cell, "bits_measured", None)
+    if measured is None:
+        measured = cell.bits
     rows = []
     for si, seed in enumerate(spec.seeds):
         for k in range(cell.gaps.shape[1]):
@@ -67,6 +101,7 @@ def cell_records(cell) -> list[dict]:
                     seed=seed,
                     round=k,
                     bits=float(cell.bits[k]),
+                    bits_measured=float(measured[k]),
                     gap=float(cell.gaps[si, k]),
                     us_per_round=cell.us_per_round,
                 )
@@ -80,12 +115,19 @@ def summary_records(cells, target: Optional[float] = None) -> list[dict]:
     figures) plus the across-seed worst case."""
     rows = []
     for cell in cells:
+        measured = getattr(cell, "bits_measured", None)
+        if measured is None:
+            measured = cell.bits
         row = dict(
             name=cell.spec.label,
             method=cell.spec.method,
             compressor=cell.spec.compressor or "",
             level=cell.spec.level if cell.spec.level is not None else "",
             num_seeds=len(cell.spec.seeds),
+            bits_per_round=float(cell.bits[1] - cell.bits[0])
+            if len(cell.bits) > 1 else 0.0,
+            bits_per_round_measured=float(measured[1] - measured[0])
+            if len(measured) > 1 else 0.0,
             us_per_round=cell.us_per_round,
         )
         if target is not None:

@@ -17,9 +17,10 @@ Execution paths:
   Hessian state sharded over the mesh's "data" axis, one pod runs the
   cell (currently the plain-FedNL cells; other cells fall back to vmap).
 
-Results come back as ``CellResult`` (stacked iterate/gap/bits histories
-plus per-cell ``us_per_round``) and tidy row dicts via
-``SweepResult.records()`` — figure code becomes spec + plot.
+Results come back as ``CellResult`` (stacked iterate/gap histories, the
+analytic AND measured cumulative-bits curves, per-cell ``us_per_round``)
+and tidy row dicts via ``SweepResult.records()`` — figure code becomes
+spec + plot, with ``bits``/``bits_measured`` side by side per row.
 """
 
 from __future__ import annotations
@@ -38,37 +39,15 @@ from .method import Oracles, make_method, scan_rounds
 
 # -- compressor construction by (family, level) --------------------------------
 
-_FAMILIES = {}
-
 
 def build_compressor(family: str, level=None):
-    """String-keyed compressor factory: ("rankr", 1) -> RankR(1), etc.
+    """String-keyed compressor factory — now a thin alias for the
+    self-registering registry in ``core.compressors``
+    (``make_compressor``); kept so engine callers and old specs keep
+    working."""
+    from ..core.compressors import make_compressor
 
-    Families: rankr, topk, powersgd, randk, dithering, blocktopk,
-    natural, identity, zero. ``level`` is the family's knob (rank, k,
-    s, ...); identity/zero take none.
-    """
-    from ..core import compressors as C
-
-    fam = family.replace("-", "").replace("_", "").lower()
-    table = {
-        "rankr": lambda l: C.RankR(int(l)),
-        "rank": lambda l: C.RankR(int(l)),
-        "topk": lambda l: C.TopK(k=int(l)),
-        "powersgd": lambda l: C.PowerSGD(r=int(l), iters=2),
-        "randk": lambda l: C.RandK(k=int(l)),
-        "dithering": lambda l: C.RandomDithering(s=int(l)),
-        "randomdithering": lambda l: C.RandomDithering(s=int(l)),
-        "blocktopk": lambda l: C.BlockTopK(k_per_block=int(l)),
-        "natural": lambda l: C.NaturalSparsification(p=float(l)),
-        "identity": lambda l: C.Identity(),
-        "none": lambda l: C.Identity(),
-        "zero": lambda l: C.Zero(),
-    }
-    if fam not in table:
-        raise ValueError(
-            f"unknown compressor family {family!r}; known: {sorted(table)}")
-    return table[fam](level)
+    return make_compressor(family, level)
 
 
 # -- specs ---------------------------------------------------------------------
@@ -128,6 +107,9 @@ class CellResult:
                           # including the one-time jit trace+compile (the
                           # quantity the engine optimizes vs serial loops),
                           # not steady-state per-round latency
+    bits_measured: Optional[np.ndarray] = None
+                          # (num_rounds+1,) cumulative bits/node, measured
+                          # from the method's payload structure
 
 
 @dataclass
@@ -220,6 +202,8 @@ class Sweep:
                 xs=np.asarray(xs),
                 gaps=gaps,
                 bits=rec.bits_curve(method, d, spec.num_rounds),
+                bits_measured=rec.measured_bits_curve(
+                    method, d, spec.num_rounds),
                 us_per_round=wall_us / max(1, spec.num_rounds),
             ))
         return SweepResult(cells)

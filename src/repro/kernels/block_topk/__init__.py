@@ -1,2 +1,2 @@
-from .ops import block_topk
-from .ref import block_topk_ref
+from .ops import block_topk, block_topk_payload
+from .ref import block_topk_payload_ref, block_topk_ref, payload_to_dense

@@ -1,10 +1,18 @@
-"""Block-local Top-K compressor kernel.
+"""Block-local Top-K compressor kernels: dense-masked and payload-emitting.
 
 Grid: one program per (bm, bn) tile held in VMEM. Per tile, keep the k
 largest-magnitude entries and zero the rest. Instead of a sort (hostile
 to the VPU), the k-th magnitude is found by ~32 rounds of bisection on
 [0, max|x|] — each round is a full-tile compare+popcount, all
 vector-friendly. Entries with |x| >= threshold survive.
+
+``block_topk_kernel`` writes the dense masked tile back (the seed-era
+output format). ``block_topk_payload_kernel`` emits the WIRE FORMAT
+directly — per tile, k (value, in-tile flat index) pairs in flat order —
+so the compressed uplink never materializes a dense (d, d) buffer. The
+survivor compaction is scatter/sort-free: flat-order positions come from
+two triangular-matmul cumsums and the k payload slots are gathered with
+a one-hot contraction (MXU-friendly); empty slots carry index -1.
 
 The resulting operator is contractive with delta = k / (bm*bn) per
 Definition 3.3 (contraction holds per tile; Frobenius norm is separable
@@ -59,3 +67,108 @@ def block_topk_kernel(x: jax.Array, k: int, block: int = 128,
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(x)
+
+
+def _bisect_bracket(ax: jax.Array, k: int, iters: int):
+    """Bisection bracket (lo, hi) on |x| with
+    count(ax >= hi) <= k <= count(ax >= lo) (full-tile scalars)."""
+    hi = jnp.max(ax)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((ax >= mid).astype(jnp.int32))
+        lo = jnp.where(cnt > k, mid, lo)
+        hi = jnp.where(cnt > k, hi, mid)
+        return lo, hi
+
+    return jax.lax.fori_loop(0, iters, body, (lo, hi))
+
+
+def _flat_positions(mask: jax.Array) -> jax.Array:
+    """Flat-order exclusive position of each True entry, scatter/sort-
+    free: within-row inclusive cumsum and row-offset cumsum as
+    triangular matmuls (MXU work, no 1D scans). mask is (b0, b1) f32."""
+    b0, b1 = mask.shape
+    col = jax.lax.broadcasted_iota(jnp.float32, (b1, b1), 0)
+    incl = jnp.dot(mask, (col <= jax.lax.broadcasted_iota(
+        jnp.float32, (b1, b1), 1)).astype(jnp.float32),
+        preferred_element_type=jnp.float32)         # (b0, b1)
+    row = jax.lax.broadcasted_iota(jnp.float32, (b0, b0), 0)
+    strict_lower = (jax.lax.broadcasted_iota(
+        jnp.float32, (b0, b0), 1) < row).astype(jnp.float32)
+    row_offset = jnp.dot(strict_lower, incl[:, b1 - 1:b1],
+                         preferred_element_type=jnp.float32)  # (b0, 1)
+    return row_offset + incl - mask                 # (b0, b1)
+
+
+def _topk_payload_tile_kernel(x_ref, vals_ref, idx_ref, *, k: int,
+                              iters: int = 32):
+    x = x_ref[...]                                  # (b0, b1)
+    b0, b1 = x.shape
+    ax = jnp.abs(x).astype(jnp.float32)
+
+    # two-phase selection (exactly k entries, Def 3.3-preserving even
+    # under ties): everything strictly above the bisection bracket
+    # first, then boundary ties in flat order until k slots fill
+    if k >= b0 * b1:
+        strict = jnp.ones(x.shape, jnp.float32)
+        tie = jnp.zeros(x.shape, jnp.float32)
+    else:
+        lo, hi = _bisect_bracket(ax, k, iters)
+        strict = (ax >= hi).astype(jnp.float32)
+        tie = (ax >= lo).astype(jnp.float32) * (1.0 - strict)
+
+    n_strict = jnp.sum(strict)
+    pos = jnp.where(strict > 0, _flat_positions(strict),
+                    n_strict + _flat_positions(tie))  # (b0, b1)
+    mask = strict + tie
+
+    flat_ids = (jax.lax.broadcasted_iota(jnp.float32, (b0, b1), 0) * b1
+                + jax.lax.broadcasted_iota(jnp.float32, (b0, b1), 1))
+
+    # one-hot slot assignment: onehot[e, s] = 1 iff entry e fills slot s;
+    # payload slots fill by a single (1, bb) @ (bb, k) dot each (tie
+    # overflow has pos >= k and never matches a slot)
+    slots = jax.lax.broadcasted_iota(jnp.float32, (b0 * b1, k), 1)
+    onehot = ((pos.reshape(b0 * b1, 1) == slots)
+              * mask.reshape(b0 * b1, 1))           # (bb, k) f32
+    # one-hot contraction is exact (each slot sums one entry + zeros);
+    # carry f64 through for f64 tiles (interpret mode), f32 otherwise
+    acc = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+    vals = jnp.dot(x.reshape(1, b0 * b1).astype(acc), onehot.astype(acc),
+                   preferred_element_type=acc)                  # (1, k)
+    ids = jnp.dot(flat_ids.reshape(1, b0 * b1), onehot,
+                  preferred_element_type=jnp.float32)           # (1, k)
+    filled = jnp.dot(jnp.ones((1, b0 * b1), jnp.float32), onehot,
+                     preferred_element_type=jnp.float32) > 0.0  # (1, k)
+
+    vals_ref[...] = vals.astype(vals_ref.dtype)
+    idx_ref[...] = jnp.where(filled, ids, -1.0).astype(jnp.int32)
+
+
+def block_topk_payload_kernel(x: jax.Array, k: int, block: int = 128,
+                              interpret: bool = False):
+    """Payload-emitting variant: x (M, N) with M, N multiples of
+    ``block``; returns (values, indices) of shape (nblocks, k), tiles in
+    row-major grid order, entries in flat in-tile order, empty slots at
+    index -1. ``k`` must be <= block**2 (ops.py clamps)."""
+    m, n = x.shape
+    gm, gn = m // block, n // block
+    grid = (gm, gn)
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_payload_tile_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, block), lambda i, j: (i, j))],
+        out_specs=(
+            pl.BlockSpec((1, k), lambda i, j: (i * gn + j, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i * gn + j, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((gm * gn, k), x.dtype),
+            jax.ShapeDtypeStruct((gm * gn, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(x)
+    return vals, idx

@@ -1,5 +1,10 @@
-"""Jit'd wrapper: pads to block multiples, dispatches to the Pallas
-kernel (interpret=True on CPU so the kernel body itself is what runs)."""
+"""Jit'd wrappers: pad to block multiples, dispatch to the Pallas
+kernels (interpret=True on CPU so the kernel body itself is what runs).
+
+``block_topk`` returns the dense masked matrix (seed-era format);
+``block_topk_payload`` returns the wire format — per-tile (values,
+indices) arrays matching ``repro.core.compressors.BlockSparsePayload``
+— without ever materializing the dense compressed matrix."""
 
 from __future__ import annotations
 
@@ -8,7 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import block_topk_kernel
+from .kernel import block_topk_kernel, block_topk_payload_kernel
 
 
 @partial(jax.jit, static_argnames=("k", "block", "interpret"))
@@ -21,3 +26,19 @@ def block_topk(x: jax.Array, k: int, block: int = 128,
     xp = jnp.pad(x, ((0, pm), (0, pn))) if (pm or pn) else x
     out = block_topk_kernel(xp, k=k, block=block, interpret=interpret)
     return out[:m, :n] if (pm or pn) else out
+
+
+@partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def block_topk_payload(x: jax.Array, k: int, block: int = 128,
+                       interpret: bool | None = None):
+    """Compressed payload of ``x``: (values, indices), both
+    (ceil(m/block) * ceil(n/block), min(k, block**2)); tiles in row-major
+    grid order, in-tile flat indices, empty slots at index -1."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = x.shape
+    pm, pn = (-m) % block, (-n) % block
+    xp = jnp.pad(x, ((0, pm), (0, pn))) if (pm or pn) else x
+    k = min(k, block * block)
+    return block_topk_payload_kernel(xp, k=k, block=block,
+                                     interpret=interpret)

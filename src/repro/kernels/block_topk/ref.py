@@ -1,4 +1,6 @@
-"""Pure-jnp oracle: exact per-block Top-K via jax.lax.top_k."""
+"""Pure-jnp oracles: exact per-block Top-K via jax.lax.top_k, in dense
+and payload (values + indices) form, plus the payload -> dense
+reconstruction used by tests and the server side."""
 
 from __future__ import annotations
 
@@ -6,12 +8,18 @@ import jax
 import jax.numpy as jnp
 
 
-def block_topk_ref(x: jax.Array, k: int, block: int = 128) -> jax.Array:
+def _tiles(x: jax.Array, block: int):
     m, n = x.shape
     assert m % block == 0 and n % block == 0
     nb0, nb1 = m // block, n // block
-    tiles = x.reshape(nb0, block, nb1, block).transpose(0, 2, 1, 3) \
+    return x.reshape(nb0, block, nb1, block).transpose(0, 2, 1, 3) \
         .reshape(nb0 * nb1, block * block)
+
+
+def block_topk_ref(x: jax.Array, k: int, block: int = 128) -> jax.Array:
+    m, n = x.shape
+    nb0, nb1 = m // block, n // block
+    tiles = _tiles(x, block)
     kk = min(k, block * block)
     _, idx = jax.lax.top_k(jnp.abs(tiles), kk)
     vals = jnp.take_along_axis(tiles, idx, axis=1)
@@ -19,3 +27,27 @@ def block_topk_ref(x: jax.Array, k: int, block: int = 128) -> jax.Array:
     out = jax.vmap(lambda o, i, v: o.at[i].set(v))(out, idx, vals)
     return out.reshape(nb0, nb1, block, block).transpose(0, 2, 1, 3) \
         .reshape(m, n)
+
+
+def block_topk_payload_ref(x: jax.Array, k: int, block: int = 128):
+    """(values, indices) per tile, in the payload kernel's layout:
+    row-major tiles, entries sorted by in-tile flat index."""
+    tiles = _tiles(x, block)
+    kk = min(k, block * block)
+    _, idx = jax.lax.top_k(jnp.abs(tiles), kk)
+    idx = jnp.sort(idx, axis=1)  # kernel compaction emits flat order
+    vals = jnp.take_along_axis(tiles, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def payload_to_dense(vals: jax.Array, idx: jax.Array, shape,
+                     block: int = 128) -> jax.Array:
+    """Reconstruct the dense compressed matrix from a (values, indices)
+    payload (either kernel or ref layout); -1 indices are dropped.
+    Delegates to the one block-sparse decoder in core.compressors —
+    the kernel payload IS a BlockSparsePayload."""
+    from repro.core.compressors import BlockSparsePayload, BlockTopK
+
+    codec = BlockTopK(k_per_block=int(vals.shape[-1]), block=block)
+    return codec.decompress(BlockSparsePayload(values=vals, indices=idx),
+                            shape)

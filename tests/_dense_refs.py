@@ -1,0 +1,57 @@
+"""Seed-era dense compressor implementations, pinned verbatim as the
+bit-identity oracle for the payload wire-format API. Imported by both
+test_payloads.py (no optional deps) and test_compressors.py (hypothesis
+fuzzing) so the two suites assert against ONE reference."""
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_dense_ref(m, k, symmetric=False):
+    def dense(t, kk):
+        flat = t.reshape(-1)
+        kk = min(kk, flat.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(flat), kk)
+        return jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(t.shape)
+
+    if symmetric:
+        c = dense(jnp.tril(m), k)
+        return c + c.T - jnp.diag(jnp.diag(c))
+    return dense(m, k)
+
+
+def randk_dense_ref(m, k, key):
+    flat = m.reshape(-1)
+    n = flat.shape[0]
+    k = min(k, n)
+    idx = jax.random.choice(key, n, (k,), replace=False)
+    mask = jnp.zeros((n,), m.dtype).at[idx].set(1.0)
+    return (flat * mask * (n / k)).reshape(m.shape)
+
+
+def blocktopk_dense_ref(m, k, b):
+    d0, d1 = m.shape
+    p0, p1 = (-d0) % b, (-d1) % b
+    mp = jnp.pad(m, ((0, p0), (0, p1)))
+    n0, n1 = mp.shape[0] // b, mp.shape[1] // b
+    tiles = mp.reshape(n0, b, n1, b).transpose(0, 2, 1, 3) \
+        .reshape(n0 * n1, b * b)
+    kk = min(k, b * b)
+    _, idx = jax.lax.top_k(jnp.abs(tiles), kk)
+    vals = jnp.take_along_axis(tiles, idx, axis=1)
+    out = jnp.zeros_like(tiles)
+    out = jax.vmap(lambda o, i, v: o.at[i].set(v))(out, idx, vals)
+    return out.reshape(n0, n1, b, b).transpose(0, 2, 1, 3) \
+        .reshape(mp.shape)[:d0, :d1]
+
+
+def rankr_dense_ref(m, r, symmetric=True):
+    if symmetric:
+        sym = 0.5 * (m + m.T)
+        lam, q = jnp.linalg.eigh(sym)
+        r = min(r, lam.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(lam), r)
+        return (q[:, idx] * lam[idx]) @ q[:, idx].T
+    u, s, vt = jnp.linalg.svd(m, full_matrices=False)
+    r = min(r, s.shape[0])
+    return (u[:, :r] * s[:r]) @ vt[:r, :]

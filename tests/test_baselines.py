@@ -45,7 +45,7 @@ def test_gd_ls_beats_gd(prob):
 
 def test_diana(prob):
     rd = RandomDithering(s=4)
-    om = rd.omega_for((20,))
+    om = rd.spec((20,)).omega
     alg = Diana(prob["grad"], rd, prob["L"], 8, om)
     final, _ = alg.run(jnp.ones(20), 8, 500)
     assert _gap(prob, final.x) < 0.05 * _gap(prob, jnp.ones(20))
@@ -53,7 +53,7 @@ def test_diana(prob):
 
 def test_adiana_converges(prob):
     rd = RandomDithering(s=4)
-    om = rd.omega_for((20,))
+    om = rd.spec((20,)).omega
     alg = Adiana(prob["grad"], rd, prob["L"], 1e-3, 8, om)
     final, _ = alg.run(jnp.ones(20), 8, 800)
     assert _gap(prob, final.y) < 0.2 * _gap(prob, jnp.ones(20))
@@ -76,7 +76,7 @@ def test_nl1_local(prob):
 
 def test_dore_and_artemis(prob):
     rd = RandomDithering(s=4)
-    om = rd.omega_for((20,))
+    om = rd.spec((20,)).omega
     dore = Dore(prob["grad"], rd, rd, prob["L"], 8, om, om)
     f1, _ = dore.run(jnp.ones(20), 8, 500)
     assert _gap(prob, f1.x) < 0.1 * _gap(prob, jnp.ones(20))

@@ -1,4 +1,8 @@
-"""Property tests for the compression operators (Definitions 3.2 / 3.3)."""
+"""Hypothesis property tests for the compression operators (Definitions
+3.2 / 3.3): contraction / unbiasedness inequalities and fuzzed payload
+round-trips (bit-identical to the seed-era dense operators, pinned here
+as references). The no-optional-deps payload/registry tests live in
+test_payloads.py."""
 
 import jax
 import jax.numpy as jnp
@@ -9,9 +13,13 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the optional [test] extra")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.compressors import (BlockTopK, Identity, NaturalSparsification,
-                                    PowerSGD, RandK, RandomDithering, RankR,
-                                    TopK, Zero, ab_constants, alpha_for)
+from _dense_refs import (blocktopk_dense_ref, randk_dense_ref,
+                         rankr_dense_ref, topk_dense_ref)
+from repro.core.compressors import (BlockTopK, BlockTopKThreshold, Identity,
+                                    NaturalSparsification, PowerSGD, RandK,
+                                    RandomDithering, RankR, TopK, Zero,
+                                    ab_constants, alpha_for,
+                                    available_compressors, make_compressor)
 
 DIMS = st.integers(min_value=2, max_value=24)
 
@@ -36,7 +44,7 @@ def test_topk_contractive(seed, d, kfrac):
     m = _rand(seed, d, d)
     k = max(1, int(kfrac * d * d))
     comp = TopK(k=k)
-    _check_contractive(comp, m, comp.delta_for((d, d)))
+    _check_contractive(comp, m, comp.spec((d, d)).delta)
 
 
 @settings(max_examples=25, deadline=None)
@@ -45,7 +53,7 @@ def test_rankr_contractive_symmetric(seed, d, r):
     m = _rand(seed, d, d)
     m = 0.5 * (m + m.T)  # FedNL compresses Hessian differences (symmetric)
     comp = RankR(r=min(r, d))
-    _check_contractive(comp, m, comp.delta_for((d, d)))
+    _check_contractive(comp, m, comp.spec((d, d)).delta)
     # output is symmetric, as A.3.2 notes
     c = comp(m)
     np.testing.assert_allclose(c, c.T, atol=1e-5)
@@ -56,7 +64,7 @@ def test_rankr_contractive_symmetric(seed, d, r):
 def test_rankr_contractive_general(seed, d, r):
     m = _rand(seed, d, d)
     comp = RankR(r=min(r, d), symmetric=False)
-    _check_contractive(comp, m, comp.delta_for((d, d)))
+    _check_contractive(comp, m, comp.spec((d, d)).delta)
 
 
 def test_rankr_symmetric_matches_svd():
@@ -82,7 +90,15 @@ def test_powersgd_contractive(seed, d, r):
 def test_block_topk_contractive(seed, kb):
     m = _rand(seed, 8, 12)
     comp = BlockTopK(k_per_block=kb, block=4)
-    _check_contractive(comp, m, comp.delta)
+    _check_contractive(comp, m, comp.spec((8, 12)).delta)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), kb=st.integers(1, 16))
+def test_block_topk_threshold_contractive(seed, kb):
+    m = _rand(seed, 8, 12)
+    comp = BlockTopKThreshold(k_per_block=kb, block=4)
+    _check_contractive(comp, m, comp.spec((8, 12)).delta)
 
 
 def test_topk_keeps_largest():
@@ -108,7 +124,7 @@ def test_randk_variance_bound(seed):
     d = 6
     m = _rand(seed, d, d)
     comp = RandK(k=9)
-    omega = comp.omega_for((d, d))
+    omega = comp.spec((d, d)).omega
     keys = jax.random.split(jax.random.PRNGKey(seed + 77), 2000)
     errs = jax.vmap(lambda k: jnp.sum((comp(m, k) - m) ** 2))(keys)
     assert float(jnp.mean(errs)) <= omega * float(jnp.sum(m**2)) * 1.1
@@ -141,17 +157,17 @@ def test_alpha_rules():
     comp = TopK(k=20)
     assert alpha_for(comp, (d, d), "one") == 1.0
     a = alpha_for(comp, (d, d), "contract")
-    delta = comp.delta_for((d, d))
+    delta = comp.spec((d, d)).delta
     assert abs(a - (1 - (1 - delta) ** 0.5)) < 1e-12
     rk = RandK(k=20)
     au = alpha_for(rk, (d, d), "auto")
-    assert abs(au - 1.0 / (1 + rk.omega_for((d, d)))) < 1e-12
+    assert abs(au - 1.0 / (1 + rk.spec((d, d)).omega)) < 1e-12
 
 
 def test_ab_constants_match_eq5():
     d = 10
     comp = TopK(k=20)
-    delta = comp.delta_for((d, d))
+    delta = comp.spec((d, d)).delta
     a, b = ab_constants(comp, (d, d), alpha=1.0)
     assert abs(a - delta / 4) < 1e-12 and abs(b - (6 / delta - 3.5)) < 1e-12
     a, b = ab_constants(comp, (d, d), alpha=1 - (1 - delta) ** 0.5)
@@ -164,3 +180,63 @@ def test_bits_accounting():
     assert RankR(r=2).bits((8, 8)) == 2 * 64 * (1 + 16)
     assert RandK(k=5).bits((8, 8)) == 5 * (64 + 32)
     assert Zero().bits((8, 8)) == 0
+
+
+# -- payload wire-format round-trips (fuzzed) ---------------------------------
+# decompress(compress(M)) must be BIT-IDENTICAL to the seed-era dense
+# operators (re-implemented here as pinned references), for every family.
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=DIMS, k=st.integers(1, 600))
+def test_topk_roundtrip_bit_identical(seed, d, k):
+    m = _rand(seed, d, d)
+    comp = TopK(k=k)
+    out = comp.decompress(comp.compress(m), m.shape)
+    assert np.array_equal(np.asarray(out), np.asarray(topk_dense_ref(m, k)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=DIMS, k=st.integers(1, 600))
+def test_topk_symmetric_roundtrip_bit_identical(seed, d, k):
+    m = _rand(seed, d, d)
+    comp = TopK(k=k, symmetric=True)
+    out = comp.decompress(comp.compress(m), m.shape)
+    ref = topk_dense_ref(m, k, symmetric=True)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 40))
+def test_randk_roundtrip_bit_identical(seed, k):
+    m = _rand(seed, 7, 9)
+    key = jax.random.PRNGKey(seed + 1)
+    comp = RandK(k=k)
+    out = comp.decompress(comp.compress(m, key), m.shape)
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(randk_dense_ref(m, k, key)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), kb=st.integers(1, 20))
+def test_blocktopk_roundtrip_bit_identical(seed, kb):
+    m = _rand(seed, 10, 14)
+    comp = BlockTopK(k_per_block=kb, block=4)
+    out = comp.decompress(comp.compress(m), m.shape)
+    ref = blocktopk_dense_ref(m, kb, 4)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), d=DIMS, r=st.integers(1, 6))
+def test_rankr_roundtrip_bit_identical(seed, d, r):
+    m = _rand(seed, d, d)
+    m = 0.5 * (m + m.T)
+    comp = RankR(r=min(r, d))
+    out = comp.decompress(comp.compress(m), m.shape)
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(rankr_dense_ref(m, min(r, d))))
+
+
+# The registry-wide Def 3.3 / 3.2 sweep lives in test_payloads.py (it
+# needs no optional deps, so it runs even without hypothesis).

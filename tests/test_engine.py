@@ -200,3 +200,44 @@ def test_engine_bits_curve_matches_method_accounting(problem):
         alg = FedNL(problem["grad"], problem["hess"], RankR(1))
         expect = alg.init_bits(D) + alg.bits_per_round(D) * np.arange(4)
         np.testing.assert_array_equal(cell.bits, expect)
+
+
+def test_engine_measured_bits_match_analytic_under_x64(problem):
+    """Acceptance: a Sweep cell reports measured per-round bits (derived
+    from the payload structure) that match the analytic bits_per_round
+    under x64, for the four acceptance compressor families."""
+    with enable_x64():
+        x0 = jnp.zeros(D, jnp.float64)
+        specs = [
+            ExperimentSpec("fednl", "rankr", 2,
+                           params=dict(option=1, mu=1e-3), num_rounds=2),
+            ExperimentSpec("fednl", "topk", D, params=dict(option=1, mu=1e-3),
+                           num_rounds=2),
+            ExperimentSpec("fednl", "blocktopk", 4,
+                           params=dict(option=1, mu=1e-3), num_rounds=2),
+            ExperimentSpec("fednl", "randk", D,
+                           params=dict(option=2, alpha=0.5), num_rounds=2),
+        ]
+        res = Sweep(specs).run(problem, x0=x0)
+        for cell in res.cells:
+            np.testing.assert_array_equal(cell.bits_measured, cell.bits)
+        rows = res.records()
+        assert all(r["bits_measured"] == r["bits"] for r in rows)
+        summ = res.summary()
+        assert all(s["bits_per_round_measured"] == s["bits_per_round"] > 0
+                   for s in summ)
+
+
+def test_engine_measured_bits_bc_uplink_downlink(problem):
+    """FedNL-BC's measured accounting covers both directions: the uplink
+    Hessian payload and the downlink model payload."""
+    with enable_x64():
+        from repro.core import TopK
+        from repro.engine import measured_bits_per_round
+
+        alg = FedNLBC(problem["grad"], problem["hess"], TopK(k=16),
+                      TopK(k=8), p=0.5)
+        up, down = alg.measured_bits_per_round(16)
+        up_a, down_a = alg.bits_per_round(16)
+        assert (up, down) == (up_a, down_a)
+        assert measured_bits_per_round(alg, 16) == up_a + down_a

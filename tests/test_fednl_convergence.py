@@ -95,7 +95,7 @@ def test_fednl_unbiased_randk(problem):
     with enable_x64():
         x0 = _x0_near(problem)
         comp = RandK(k=64)
-        omega = comp.omega_for((16, 16))
+        omega = comp.spec((16, 16)).omega
         alg = FedNL(problem["grad"], problem["hess"], comp,
                     alpha=1.0 / (1.0 + omega), option=1, mu=1e-3)
         final, _ = alg.run(x0, 8, 60)

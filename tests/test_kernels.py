@@ -6,7 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.block_topk import block_topk, block_topk_ref
+from repro.kernels.block_topk import (block_topk, block_topk_payload,
+                                      block_topk_payload_ref, block_topk_ref,
+                                      payload_to_dense)
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.hess_update import hess_update, hess_update_ref
 from repro.kernels.tiled_matmul import (powersgd_rank_r, powersgd_rank_r_ref,
@@ -51,6 +53,70 @@ def test_block_topk_bf16_semantics(shape, k):
     # contraction with delta = k/block^2 per tile
     nm2 = float((xi ** 2).sum())
     assert float(((xo - xi) ** 2).sum()) <= nm2 + 1e-3
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("k", [1, 16, 200])
+def test_block_topk_payload_matches_ref(shape, k):
+    """The payload-emitting kernel agrees with the jnp payload oracle
+    entrywise (values AND indices, flat in-tile order) and reconstructs
+    the dense kernel's output exactly."""
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    vals, idx = block_topk_payload(x, k=k, block=128)
+    m, n = shape
+    pm, pn = (-m) % 128, (-n) % 128
+    xp = jnp.pad(x, ((0, pm), (0, pn)))
+    rv, ri = block_topk_payload_ref(xp, k=k, block=128)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rv))
+    dense = payload_to_dense(vals, idx, shape, block=128)
+    ref_dense = block_topk(x, k=k, block=128)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(ref_dense))
+
+
+def test_block_topk_payload_vmap_over_silos():
+    """Acceptance: the Pallas payload op agrees with the jnp reference
+    under vmap over the silo axis (stacked Hessian diffs), with static
+    payload shapes."""
+    stack = jax.random.normal(jax.random.PRNGKey(2), (3, 256, 130))
+    pad = jnp.pad(stack, ((0, 0), (0, 0), (0, (-130) % 128)))
+    vv, ii = jax.vmap(lambda m: block_topk_payload(m, k=32, block=128))(stack)
+    rv, ri = jax.vmap(
+        lambda m: block_topk_payload_ref(m, k=32, block=128))(pad)
+    assert vv.shape == (3, 2 * 2, 32) and ii.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(ii), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(vv), np.asarray(rv))
+
+
+def test_block_topk_payload_tie_cluster_keeps_exactly_k():
+    """Regression: a tie cluster spanning the k-th position must not
+    undershoot (threshold-only cut) nor corrupt the reconstruction
+    through -1 padding; the kernel's two-phase fill keeps exactly k."""
+    t = jnp.zeros((128, 128)).at[:4, :4].set(
+        jnp.full((4, 4), 1.0).at[0, 0].set(1.0001))
+    vals, idx = block_topk_payload(t, k=3, block=128)
+    dense = payload_to_dense(vals, idx, (128, 128), block=128)
+    kept = np.asarray(dense) != 0
+    assert kept.sum() == 3
+    assert float(dense[0, 0]) == float(np.float32(1.0001))
+    err = float(jnp.sum((dense - t) ** 2))
+    nm2 = float(jnp.sum(t * t))
+    assert err <= (1 - 3 / (128 * 128)) * nm2 * (1 + 1e-6)
+
+
+def test_block_topk_payload_matches_compressor_payload():
+    """The kernel's native output format IS BlockSparsePayload: same
+    decompressed matrix as the core BlockTopK codec (selection sets
+    agree on tie-free data; entry order differs, scatter doesn't care)."""
+    from repro.core.compressors import BlockTopK
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (256, 256))
+    comp = BlockTopK(k_per_block=64, block=128)
+    vals, idx = block_topk_payload(x, k=64, block=128)
+    via_kernel = payload_to_dense(vals, idx, x.shape, block=128)
+    via_codec = comp.decompress(comp.compress(x), x.shape)
+    np.testing.assert_array_equal(np.asarray(via_kernel),
+                                  np.asarray(via_codec))
 
 
 def test_block_topk_is_contractive():
