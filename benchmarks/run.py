@@ -17,6 +17,7 @@ with a ``us_per_round`` column per cell.
   fig9_pp           FedNL-PP tau sweep + vs Artemis
   fig14_heterogeneity  synthetic(alpha, beta) sweep
   table2_rates      Thm 3.6 / NS / N0 rate checks
+  server_aggregate  payload-space aggregate vs decompress-then-mean (n x d)
   engine_vmap       multi-seed vmap speedup vs serial per-seed loops
   roofline          (arch x shape) table from the dry-run JSONL
 
@@ -476,6 +477,69 @@ def payload_roundtrip(fast=False):
            f"|claim_pallas_payload_matches_codec={ok_kernel}")
 
 
+def server_aggregate(fast=False):
+    """Payload-space server aggregation micro-benchmark: for an n-silo
+    stack of compressed (d, d) Hessian-diff payloads, time the
+    structure-aware ``Compressor.aggregate`` fast path (one dense
+    accumulator) against the decompress-then-mean fallback (the
+    (n, d, d) stack the PR-2 era server built), over an n x d sweep.
+    Claims: the two agree to f64 tolerance everywhere, and the sparse
+    fast paths (TopK scatter-add, BlockTopK per-tile scatter-add) are
+    >= 2x at n >= 32, d >= 256."""
+    from repro.core import BlockTopK, Compressor, RankR, TopK
+
+    shapes = [(8, 128), (32, 256)] if fast else [
+        (8, 256), (32, 256), (32, 512), (64, 512)]
+
+    def bench(fn, arg, reps=10):
+        out = jax.block_until_ready(fn(arg))  # compile
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(arg)
+        jax.block_until_ready(out)
+        return out, (time.time() - t0) * 1e6 / reps
+
+    rows, fields = [], []
+    ok_match, ok_speed, us_total = True, True, 0.0
+    for n, d in shapes:
+        diffs = jax.random.normal(jax.random.PRNGKey(0), (n, d, d))
+        diffs = 0.5 * (diffs + jnp.swapaxes(diffs, -1, -2))
+        keys = jax.random.split(jax.random.PRNGKey(1), n)
+        cases = {
+            "topk": TopK(k=4 * d),
+            "blocktopk": BlockTopK(k_per_block=64, block=128),
+            "rankr": RankR(4),
+        }
+        cell = []
+        for name, comp in cases.items():
+            payloads = jax.block_until_ready(
+                jax.jit(jax.vmap(comp.compress))(diffs, keys))
+            # the PR-2 era server: decompress every silo, mean the stack
+            fallback = jax.jit(lambda P, c=comp: Compressor.aggregate(
+                c, P, (d, d)))
+            fast_fn = jax.jit(lambda P, c=comp: c.aggregate(P, (d, d)))
+            out_slow, us_slow = bench(fallback, payloads)
+            out_fast, us_fast = bench(fast_fn, payloads)
+            err = float(jnp.max(jnp.abs(out_fast - out_slow)))
+            scale = float(jnp.max(jnp.abs(out_slow))) + 1e-30
+            speedup = us_slow / max(us_fast, 1e-9)
+            ok_match &= err <= 1e-12 * max(1.0, scale)
+            if name in ("topk", "blocktopk") and n >= 32 and d >= 256:
+                ok_speed &= speedup >= 2.0
+            us_total += us_fast
+            rows.append((n, d, name, us_slow, us_fast, speedup, err))
+            cell.append(f"{name}={speedup:.1f}x")
+        fields.append(f"n{n}d{d}:" + ";".join(cell))
+
+    write_csv("server_aggregate",
+              ["n", "d", "compressor", "us_decompress_mean", "us_aggregate",
+               "speedup", "max_abs_err"], rows)
+    report("server_aggregate", us_total,
+           "|".join(fields)
+           + f"|claim_fast_matches_fallback={ok_match}"
+           f"|claim_sparse_speedup_ge_2x={ok_speed}")
+
+
 def engine_vmap(fast=False):
     """The engine's headline: an s-seed cell as ONE vmapped jitted program
     vs s serial per-seed runs (the seed-era execution model)."""
@@ -533,7 +597,8 @@ def roofline(fast=False):
 
 BENCHES = [fig2_local, fig2_global, fig2_nl1, fig3_compression, fig4_options,
            fig6_update_rules, fig7_bc, fig9_pp, fig14_heterogeneity,
-           table2_rates, payload_roundtrip, engine_vmap, roofline]
+           table2_rates, payload_roundtrip, server_aggregate, engine_vmap,
+           roofline]
 
 
 def main() -> None:

@@ -24,6 +24,7 @@ from .compressors import (
     make_compressor,
     payload_bits,
     register_compressor,
+    scale_payload,
 )
 from .extensions import FedNLPPBC, StochasticFedNL
 from .fednl import FedNL, FedNLState

@@ -22,10 +22,25 @@ The payload is the first-class object a device actually uplinks —
 indices+values for the sparsifiers, factors for the low-rank family,
 levels+norm for dithering — and ``payload.bits()`` is the *measured*
 wire size, derived from the payload's own arrays (dtype widths x
-static shapes), not asserted. ``comp.spec(shape)`` returns the analytic
+static shapes), not asserted. The sparsifier payloads additionally
+quote an entropy-coded index stream, ``bits(index_coding="entropy")``:
+the log2 C(universe, k) information cost of the index set (the
+paper-style k*log2(d^2/k) accounting) instead of k raw 32-bit ints.
+``comp.spec(shape)`` returns the analytic
 ``CompSpec(delta, omega, bits, deterministic)`` consumed by
 ``alpha_for`` / ``ab_constants``; ``payload_bits`` measures the payload
 via ``jax.eval_shape`` (no compute, so it is exact for any shape).
+
+The server never needs the per-silo dense matrices: ``comp.aggregate``
+consumes the *stacked* payloads of all n silos (leading silo axis, as
+produced by ``jax.vmap(comp.compress)``) and returns the dense mean
+``S = mean_i S_i`` directly from payload space — scatter-add into one
+(d, d) accumulator for the sparsifiers (Pallas kernel on TPU:
+``kernels/scatter_accum``), one stacked-factor matmul for the low-rank
+family, a direct mean for dense/dithered wires. The generic fallback is
+decompress-then-mean; ``scale_payload`` reweights per-silo
+contributions (zero weight = silo absent), which is how partial
+participation masks the aggregate.
 
 Compressors self-register in the string-keyed registry (mirroring the
 Method registry): ``make_compressor("rankr", 1) -> RankR(1)``.
@@ -80,24 +95,45 @@ def canonical_float_bits() -> int:
 # dims so a payload vmapped over a silo axis still reports per-silo bits.
 
 
+def _entropy_index_bits(k: int, universe: int) -> int:
+    """Information cost of an (unordered) k-subset of ``universe`` slots:
+    ceil(log2 C(universe, k)) — the k*log2(d^2/k)-style accounting an
+    entropy-coded index stream would approach. Capped at the raw
+    k*INDEX_BITS (a real codec falls back to raw when entropy coding
+    would lose). Estimate only — no actual codec is implemented."""
+    if k <= 0 or universe <= 0 or k >= universe:
+        return 0
+    ln2 = math.log(2.0)
+    log2c = (math.lgamma(universe + 1) - math.lgamma(k + 1)
+             - math.lgamma(universe - k + 1)) / ln2
+    return min(k * INDEX_BITS, math.ceil(log2c))
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class SparsePayload:
     """k (value, flat-index) pairs. Indices may be -1 (padding slots,
-    dropped on decompress)."""
+    dropped on decompress). ``universe`` is the number of addressable
+    slots the indices were drawn from (d^2, or the triangle count for
+    symmetric operators) — static metadata captured at compress time,
+    consumed only by the entropy-coded bits estimate."""
 
     values: jax.Array   # (..., k)
     indices: jax.Array  # (..., k) int32
+    universe: int = dataclasses.field(metadata=dict(static=True), default=0)
 
     def tree_flatten(self):
-        return (self.values, self.indices), None
+        return (self.values, self.indices), (self.universe,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, *aux)
 
-    def bits(self) -> int:
+    def bits(self, index_coding: str = "raw") -> int:
         k = int(self.values.shape[-1])
+        if index_coding == "entropy" and self.universe:
+            return (k * _dtype_bits(self.values)
+                    + _entropy_index_bits(k, self.universe))
         return k * (_dtype_bits(self.values) + _dtype_bits(self.indices))
 
 
@@ -110,16 +146,21 @@ class BlockSparsePayload:
 
     values: jax.Array   # (..., nblocks, k)
     indices: jax.Array  # (..., nblocks, k) int32
+    universe: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # ^ addressable slots per tile (block^2); entropy accounting only
 
     def tree_flatten(self):
-        return (self.values, self.indices), None
+        return (self.values, self.indices), (self.universe,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, *aux)
 
-    def bits(self) -> int:
+    def bits(self, index_coding: str = "raw") -> int:
         nblk, k = (int(s) for s in self.values.shape[-2:])
+        if index_coding == "entropy" and self.universe:
+            return nblk * (k * _dtype_bits(self.values)
+                           + _entropy_index_bits(k, self.universe))
         return nblk * k * (_dtype_bits(self.values) + _dtype_bits(self.indices))
 
 
@@ -141,7 +182,8 @@ class LowRankPayload:
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
-    def bits(self) -> int:
+    def bits(self, index_coding: str = "raw") -> int:
+        # no index stream — index_coding accepted for API uniformity
         d0, r = (int(s) for s in self.left.shape[-2:])
         d1 = int(self.right.shape[-2])
         mid = int(self.middle.shape[-1])
@@ -162,17 +204,22 @@ class DensePayload:
     values: jax.Array
     count: int = dataclasses.field(metadata=dict(static=True), default=0)
     indexed: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    universe: int = dataclasses.field(metadata=dict(static=True), default=0)
 
     def tree_flatten(self):
-        return (self.values,), (self.count, self.indexed)
+        return (self.values,), (self.count, self.indexed, self.universe)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0], *aux)
 
-    def bits(self) -> int:
-        per = _dtype_bits(self.values) + (INDEX_BITS if self.indexed else 0)
-        return self.count * per
+    def bits(self, index_coding: str = "raw") -> int:
+        vbits = self.count * _dtype_bits(self.values)
+        if not self.indexed:
+            return vbits
+        if index_coding == "entropy" and self.universe:
+            return vbits + _entropy_index_bits(self.count, self.universe)
+        return vbits + self.count * INDEX_BITS
 
 
 @jax.tree_util.register_pytree_node_class
@@ -196,7 +243,8 @@ class DitheredPayload:
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
-    def bits(self) -> int:
+    def bits(self, index_coding: str = "raw") -> int:
+        # dense level stream, no index stream
         level_bits = max(1, math.ceil(math.log2(self.s + 1)))
         return _dtype_bits(self.norm) + self.count * (1 + level_bits)
 
@@ -209,6 +257,50 @@ def _scatter_flat(values, indices, n: int) -> jax.Array:
     entry instead of dropping the padding."""
     indices = jnp.where(indices < 0, n, indices)
     return jnp.zeros((n,), values.dtype).at[indices].set(values, mode="drop")
+
+
+def scale_payload(payload, w: jax.Array):
+    """Reweight per-silo contributions of a STACKED payload (leading
+    silo axis): returns a payload whose decoded dense matrices are
+    ``w_i * decompress(payload_i)``. Zero weight removes a silo from
+    ``Compressor.aggregate`` — the partial-participation mask. The
+    scale multiplies the one leaf each wire format is linear in
+    (values; low-rank middle; dithering signs)."""
+    if isinstance(payload, LowRankPayload):
+        field = "middle"
+    elif isinstance(payload, DitheredPayload):
+        field = "signs"
+    else:
+        field = "values"
+    leaf = getattr(payload, field)
+    w = jnp.asarray(w, leaf.dtype)
+    wb = w.reshape(w.shape + (1,) * (leaf.ndim - w.ndim))
+    return dataclasses.replace(payload, **{field: leaf * wb})
+
+
+def _sparse_aggregate(payloads: "SparsePayload", shape) -> jax.Array:
+    """mean_i of stacked SparsePayloads via ONE dense accumulator
+    (kernels/scatter_accum: Pallas one-hot-matmul scatter on TPU, a
+    single XLA scatter-add elsewhere). -1 padding is dropped; duplicate
+    indices across silos accumulate — exactly the server sum."""
+    from ..kernels.scatter_accum import scatter_accumulate
+
+    n = payloads.values.shape[0]
+    shape2 = tuple(int(s) for s in shape)
+    if len(shape2) != 2:  # vectors (downlink model payloads) etc.
+        shape2 = (1, numel(shape))
+    total = scatter_accumulate(payloads.values, payloads.indices, shape2)
+    return (total / n).reshape(shape)
+
+
+def _lowrank_aggregate(payloads: "LowRankPayload", shape) -> jax.Array:
+    """mean_i (left_i * middle_i) @ right_i^T by stacking factors: one
+    batched matmul contracting over (silo, rank) — never per-silo dense
+    matrices. ``middle`` broadcasts for both wire layouts: (n, r)
+    eigen/singular values and (n, 1) PowerSGD rescale."""
+    left, right, mid = payloads.left, payloads.right, payloads.middle
+    n = left.shape[0]
+    return jnp.einsum("nir,njr->ij", left * mid[:, None, :], right) / n
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +338,21 @@ class Compressor:
     def __call__(self, m: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
         return self.decompress(self.compress(m, key), m.shape)
 
+    def aggregate(self, payloads, shape) -> jax.Array:
+        """Server-side mean over silos, straight from payload space.
+
+        ``payloads`` is a STACKED payload pytree with a leading silo
+        axis (the output of ``jax.vmap(self.compress)``); returns the
+        dense ``mean_i decompress(payload_i, shape)`` as ONE (d, d)
+        array. This generic fallback decompresses-then-means (the only
+        place an (n, d, d) stack is ever allowed on the server);
+        subclasses override with structure-aware accumulation that
+        never materializes it. Equivalence is pinned per registered
+        family by tests/test_aggregate.py (f64 tolerance — reduction
+        order differs)."""
+        dec = jax.vmap(lambda p: self.decompress(p, shape))(payloads)
+        return jnp.mean(dec, axis=0)
+
     def spec(self, shape) -> CompSpec:
         raise NotImplementedError
 
@@ -254,18 +361,21 @@ class Compressor:
         return self.spec(shape).bits
 
 
-def payload_bits(comp: Compressor, shape, dtype=None) -> int:
+def payload_bits(comp: Compressor, shape, dtype=None,
+                 index_coding: str = "raw") -> int:
     """MEASURED wire bits of one payload: build the payload's structure
     with ``jax.eval_shape`` (no FLOPs) and ask it. This is the number a
     real serializer would put on the wire for the ambient dtype —
     compare with ``comp.spec(shape).bits``, the paper's analytic claim
-    at FLOAT_BITS=64."""
+    at FLOAT_BITS=64. ``index_coding="entropy"`` swaps the raw 32-bit
+    index streams for their log2 C(universe, k) information cost
+    (payloads without an index stream are unchanged)."""
     if dtype is None:
         dtype = jnp.result_type(float)
     m = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
     key = jax.ShapeDtypeStruct((2,), jnp.dtype(jnp.uint32))
     pay = jax.eval_shape(comp.compress, m, key)
-    return int(pay.bits())
+    return int(pay.bits(index_coding=index_coding))
 
 
 # ---------------------------------------------------------------------------
@@ -341,11 +451,21 @@ class TopK(Compressor):
         flat = (jnp.tril(m) if sym else m).reshape(-1)
         k = min(self.k, self._slots(m.shape))
         _, idx = jax.lax.top_k(jnp.abs(flat), k)
-        return SparsePayload(values=flat[idx], indices=idx.astype(jnp.int32))
+        return SparsePayload(values=flat[idx], indices=idx.astype(jnp.int32),
+                             universe=self._slots(m.shape))
 
     def decompress(self, payload: SparsePayload, shape) -> jax.Array:
         c = _scatter_flat(payload.values, payload.indices,
                           numel(shape)).reshape(shape)
+        if self.symmetric and len(shape) == 2 and shape[0] == shape[1]:
+            return c + c.T - jnp.diag(jnp.diag(c))
+        return c
+
+    def aggregate(self, payloads: SparsePayload, shape) -> jax.Array:
+        """Scatter-add all n*k (value, index) pairs into ONE dense
+        accumulator, then mean (and symmetrize — linear, so it commutes
+        with the mean). Never builds the (n, d, d) stack."""
+        c = _sparse_aggregate(payloads, shape)
         if self.symmetric and len(shape) == 2 and shape[0] == shape[1]:
             return c + c.T - jnp.diag(jnp.diag(c))
         return c
@@ -399,6 +519,20 @@ class _BlockSparse(Compressor):
             out, idx, payload.values)
         return _from_tiles(out, shape, b)
 
+    def aggregate(self, payloads: BlockSparsePayload, shape) -> jax.Array:
+        """Per-tile scatter-add of all n silos' pairs into ONE tiled
+        accumulator (kernels/scatter_accum block kernel on TPU), then
+        crop and mean — tiles are disjoint, so the tile-local sums ARE
+        the dense sum."""
+        from ..kernels.scatter_accum import block_scatter_accumulate
+
+        b = self.block
+        n = payloads.values.shape[0]
+        gm, gn = -(-int(shape[0]) // b), -(-int(shape[1]) // b)
+        total = block_scatter_accumulate(payloads.values, payloads.indices,
+                                         (gm, gn), b)
+        return total[:shape[0], :shape[1]] / n
+
     def spec(self, shape) -> CompSpec:
         b = self.block
         nblk = -(-shape[0] // b) * -(-shape[1] // b)
@@ -419,7 +553,8 @@ class BlockTopK(_BlockSparse):
         tiles = _to_tiles(m, self.block)
         _, idx = jax.lax.top_k(jnp.abs(tiles), self._k())
         vals = jnp.take_along_axis(tiles, idx, axis=1)
-        return BlockSparsePayload(values=vals, indices=idx.astype(jnp.int32))
+        return BlockSparsePayload(values=vals, indices=idx.astype(jnp.int32),
+                                  universe=self.block * self.block)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -478,7 +613,8 @@ class BlockTopKThreshold(_BlockSparse):
         idx = jnp.full((nblk, k), -1, jnp.int32) \
             .at[rows, slot].set(jnp.arange(bb, dtype=jnp.int32)[None, :],
                                 mode="drop")
-        return BlockSparsePayload(values=vals, indices=idx)
+        return BlockSparsePayload(values=vals, indices=idx,
+                                  universe=self.block * self.block)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -513,6 +649,9 @@ class RankR(Compressor):
 
     def decompress(self, payload: LowRankPayload, shape) -> jax.Array:
         return (payload.left * payload.middle) @ payload.right.T
+
+    def aggregate(self, payloads: LowRankPayload, shape) -> jax.Array:
+        return _lowrank_aggregate(payloads, shape)
 
     def spec(self, shape) -> CompSpec:
         r = min(self.r, min(shape))
@@ -562,6 +701,11 @@ class PowerSGD(Compressor):
     def decompress(self, payload: LowRankPayload, shape) -> jax.Array:
         return (payload.left @ payload.right.T) * payload.middle[0]
 
+    def aggregate(self, payloads: LowRankPayload, shape) -> jax.Array:
+        # (L_i @ R_i^T) * mid_i[0] == (L_i * mid_i) @ R_i^T — same
+        # stacked-factor contraction as RankR
+        return _lowrank_aggregate(payloads, shape)
+
     def spec(self, shape) -> CompSpec:
         r = min(self.r, min(shape))
         return CompSpec(delta=r / min(shape), omega=None,
@@ -580,6 +724,12 @@ class Identity(Compressor):
     def decompress(self, payload: DensePayload, shape) -> jax.Array:
         return payload.values.reshape(shape)
 
+    def aggregate(self, payloads: DensePayload, shape) -> jax.Array:
+        # the wire IS dense: the mean over the stacked wire values is
+        # the server reduction itself (no decompress round-trip)
+        n = payloads.values.shape[0]
+        return jnp.mean(payloads.values.reshape((n,) + tuple(shape)), axis=0)
+
     def spec(self, shape) -> CompSpec:
         return CompSpec(delta=1.0, omega=None,
                         bits=numel(shape) * FLOAT_BITS, deterministic=True)
@@ -592,11 +742,15 @@ class Zero(Compressor):
 
     def compress(self, m: jax.Array, key=None) -> SparsePayload:
         return SparsePayload(values=m.reshape(-1)[:0],
-                             indices=jnp.zeros((0,), jnp.int32))
+                             indices=jnp.zeros((0,), jnp.int32),
+                             universe=numel(m.shape))
 
     def decompress(self, payload: SparsePayload, shape) -> jax.Array:
         return _scatter_flat(payload.values, payload.indices,
                              numel(shape)).reshape(shape)
+
+    def aggregate(self, payloads: SparsePayload, shape) -> jax.Array:
+        return jnp.zeros(shape, payloads.values.dtype)
 
     def spec(self, shape) -> CompSpec:
         return CompSpec(delta=0.0, omega=None, bits=0, deterministic=True)
@@ -623,11 +777,14 @@ class RandK(Compressor):
         k = min(self.k, n)
         idx = jax.random.choice(key, n, (k,), replace=False)
         return SparsePayload(values=flat[idx] * (n / k),
-                             indices=idx.astype(jnp.int32))
+                             indices=idx.astype(jnp.int32), universe=n)
 
     def decompress(self, payload: SparsePayload, shape) -> jax.Array:
         return _scatter_flat(payload.values, payload.indices,
                              numel(shape)).reshape(shape)
+
+    def aggregate(self, payloads: SparsePayload, shape) -> jax.Array:
+        return _sparse_aggregate(payloads, shape)
 
     def spec(self, shape) -> CompSpec:
         n = numel(shape)
@@ -664,6 +821,14 @@ class RandomDithering(Compressor):
         out = payload.signs * norm * levels
         return jnp.where(norm > 1e-29, out, jnp.zeros_like(out)).reshape(shape)
 
+    def aggregate(self, payloads: DitheredPayload, shape) -> jax.Array:
+        # direct mean of the elementwise decode: the dithered wire is
+        # already dense-sized (a level per entry), so vmapped decode +
+        # mean IS the payload-space reduction — one decode
+        # implementation, no extra dense intermediates beyond the wire
+        dec = jax.vmap(lambda p: self.decompress(p, shape))(payloads)
+        return jnp.mean(dec, axis=0)
+
     def spec(self, shape) -> CompSpec:
         n = numel(shape)
         level_bits = max(1, math.ceil(math.log2(self.s + 1)))
@@ -688,10 +853,15 @@ class NaturalSparsification(Compressor):
         assert key is not None
         mask = jax.random.bernoulli(key, self.p, x.shape).astype(x.dtype)
         return DensePayload(values=x * mask / self.p,
-                            count=int(self.p * numel(x.shape)), indexed=True)
+                            count=int(self.p * numel(x.shape)), indexed=True,
+                            universe=numel(x.shape))
 
     def decompress(self, payload: DensePayload, shape) -> jax.Array:
         return payload.values.reshape(shape)
+
+    def aggregate(self, payloads: DensePayload, shape) -> jax.Array:
+        n = payloads.values.shape[0]
+        return jnp.mean(payloads.values.reshape((n,) + tuple(shape)), axis=0)
 
     def spec(self, shape) -> CompSpec:
         return CompSpec(

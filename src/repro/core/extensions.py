@@ -69,7 +69,8 @@ class StochasticFedNL(MethodBase):
         grads = self.grad_fn(state.x)
         hesses = self.hess_fn(state.x, k_h)          # noisy local Hessians
         diff = hesses - state.h_local
-        s_i = self._compress_uplink(diff, silo_keys)
+        payloads = self._uplink_payloads(diff, silo_keys)
+        s_i = self._local_hessians(payloads, diff.shape[1:])
         l_i = jax.vmap(frob_norm)(diff)
 
         grad = jnp.mean(grads, axis=0)
@@ -80,7 +81,8 @@ class StochasticFedNL(MethodBase):
         return FedNLState(
             x=x_new,
             h_local=state.h_local + self.alpha * s_i,
-            h_global=state.h_global + self.alpha * jnp.mean(s_i, axis=0),
+            h_global=state.h_global + self.alpha * self._server_aggregate(
+                payloads, diff.shape[1:]),
             key=key, step=state.step + 1,
         )
 
@@ -168,7 +170,8 @@ class FedNLPPBC(MethodBase):
         hess_z = self.hess_fn(z_new)
         grads_z = self.grad_fn(z_new)
         diff = hess_z - state.h_local
-        s_i = self._compress_uplink(diff, silo_keys)
+        payloads = self._uplink_payloads(diff, silo_keys)
+        s_i = self._local_hessians(payloads, (d, d))
         h_upd = state.h_local + self.alpha * s_i
         l_upd = jax.vmap(frob_norm)(h_upd - hess_z)
         g_upd = jax.vmap(lambda h, l, gi: (h + l * eye) @ z_new - gi)(
@@ -181,8 +184,8 @@ class FedNLPPBC(MethodBase):
             h_local=jnp.where(maskm, h_upd, state.h_local),
             l_local=jnp.where(active, l_upd, state.l_local),
             g_local=jnp.where(mask, g_upd, state.g_local),
-            h_global=state.h_global + jnp.mean(
-                jnp.where(maskm, self.alpha * s_i, 0.0), axis=0),
+            h_global=state.h_global + self.alpha * self._server_aggregate(
+                payloads, (d, d), weights=active.astype(state.z.dtype)),
             l_global=state.l_global + jnp.mean(
                 jnp.where(active, l_upd - state.l_local, 0.0)),
             g_global=state.g_global + jnp.mean(
@@ -196,13 +199,15 @@ class FedNLPPBC(MethodBase):
         down = self.comp_m.bits((d,))
         return up, down
 
-    def measured_bits_per_round(self, d: int) -> tuple[int, int]:
+    def measured_bits_per_round(self, d: int,
+                                index_coding: str = "raw") -> tuple[int, int]:
         """Overrides the MethodBase default: bidirectional wire."""
         from .compressors import canonical_float_bits, payload_bits
 
         fb = canonical_float_bits()
-        up = payload_bits(self.comp, (d, d)) + fb + d * fb
-        down = payload_bits(self.comp_m, (d,))
+        up = (payload_bits(self.comp, (d, d), index_coding=index_coding)
+              + fb + d * fb)
+        down = payload_bits(self.comp_m, (d,), index_coding=index_coding)
         return up, down
 
 

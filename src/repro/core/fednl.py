@@ -17,10 +17,13 @@ One communication round (paper Sec. 3):
 The implementation is a pure jittable step over *stacked* per-silo state,
 so the same code runs (a) single-process via vmap, and (b) sharded over a
 mesh axis via shard_map (see core/federated.py). The device uplink is an
-explicit wire object: each silo builds a compressed ``Payload`` and the
-"server" reconstructs the dense S_i from it, so communicated bits are
-*measured* from the payload structure (``measured_bits_per_round``) next
-to the paper's analytic accounting (``bits_per_round``).
+explicit wire object: each silo builds a compressed ``Payload``, keeps
+its OWN dense S_i for the local H_i update, and the server computes
+S = mean_i S_i *in payload space* (``Compressor.aggregate`` — one dense
+(d, d) accumulator, no per-silo decompression server-side). Communicated
+bits are *measured* from the payload structure
+(``measured_bits_per_round``) next to the paper's analytic accounting
+(``bits_per_round``).
 """
 
 from __future__ import annotations
@@ -109,12 +112,15 @@ class FedNL(MethodBase):
         hesses = self.hess_fn(state.x)                    # (n, d, d)
 
         diff = hesses - state.h_local                     # (n, d, d)
-        # devices uplink payloads; the server decompresses to dense S_i
-        s_i = self._compress_uplink(diff, silo_keys)
+        # devices uplink payloads; each silo keeps its OWN dense S_i for
+        # the local H_i update, the server means in payload space — the
+        # (n, d, d) decompressed stack never reaches the server
+        payloads = self._uplink_payloads(diff, silo_keys)
+        s_i = self._local_hessians(payloads, diff.shape[1:])
         l_i = jax.vmap(frob_norm)(diff)                   # (n,)
 
         grad = self._mean(grads)
-        s_mean = self._mean(s_i)
+        s_mean = self._server_aggregate(payloads, diff.shape[1:])
         l_mean = self._mean(l_i)
 
         h_global = state.h_global + self.alpha * s_mean

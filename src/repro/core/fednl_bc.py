@@ -89,7 +89,8 @@ class FedNLBC(MethodBase):
 
         hess_z = self.hess_fn(state.z)
         diff = hess_z - state.h_local
-        s_i = self._compress_uplink(diff, silo_keys)
+        payloads = self._uplink_payloads(diff, silo_keys)
+        s_i = self._local_hessians(payloads, diff.shape[1:])
         l_i = jax.vmap(frob_norm)(diff)
 
         # --- server --------------------------------------------------------
@@ -102,7 +103,8 @@ class FedNLBC(MethodBase):
         x_new = state.z - solve_newton_system(h_eff, g)
 
         h_local = state.h_local + self.alpha * s_i
-        h_global = state.h_global + self.alpha * jnp.mean(s_i, axis=0)
+        h_global = state.h_global + self.alpha * self._server_aggregate(
+            payloads, diff.shape[1:])
 
         # downlink: the server broadcasts the compressed model increment
         # as a wire payload; every device decompresses and learns z
@@ -121,15 +123,18 @@ class FedNLBC(MethodBase):
         down = self.comp_m.bits((d,)) + 1  # model increment + xi bit
         return up, down
 
-    def measured_bits_per_round(self, d: int) -> tuple[float, int]:
+    def measured_bits_per_round(self, d: int,
+                                index_coding: str = "raw") -> tuple[float, int]:
         """Measured counterpart (overrides the MethodBase default: this
         wire is bidirectional): uplink/downlink payload structure sizes
         via jax.eval_shape over both compressors' payloads."""
         from .compressors import canonical_float_bits, payload_bits
 
         fb = canonical_float_bits()
-        up = self.p * d * fb + payload_bits(self.comp, (d, d)) + fb
-        down = payload_bits(self.comp_m, (d,)) + 1
+        up = (self.p * d * fb
+              + payload_bits(self.comp, (d, d), index_coding=index_coding)
+              + fb)
+        down = payload_bits(self.comp_m, (d,), index_coding=index_coding) + 1
         return up, down
 
 

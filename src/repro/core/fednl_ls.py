@@ -59,7 +59,8 @@ class FedNLLS(MethodBase):
         grads = self.grad_fn(state.x)
         hesses = self.hess_fn(state.x)
         diff = hesses - state.h_local
-        s_i = self._compress_uplink(diff, silo_keys)
+        payloads = self._uplink_payloads(diff, silo_keys)
+        s_i = self._local_hessians(payloads, diff.shape[1:])
 
         grad = jnp.mean(grads, axis=0)
         h_eff = project_psd(state.h_global, self.mu)
@@ -71,7 +72,8 @@ class FedNLLS(MethodBase):
         return FedNLState(
             x=x_new,
             h_local=state.h_local + self.alpha * s_i,
-            h_global=state.h_global + self.alpha * jnp.mean(s_i, axis=0),
+            h_global=state.h_global + self.alpha * self._server_aggregate(
+                payloads, diff.shape[1:]),
             key=key,
             step=state.step + 1,
         )

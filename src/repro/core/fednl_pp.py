@@ -94,7 +94,8 @@ class FedNLPP(MethodBase):
         grads_new = self.grad_fn(x_new)
 
         diff = hess_new - state.h_local
-        s_i = self._compress_uplink(diff, silo_keys)
+        payloads = self._uplink_payloads(diff, silo_keys)
+        s_i = self._local_hessians(payloads, (d, d))
         h_upd = state.h_local + self.alpha * s_i
         l_upd = jax.vmap(frob_norm)(h_upd - hess_new)
         eye = jnp.eye(d, dtype=state.x.dtype)
@@ -107,9 +108,12 @@ class FedNLPP(MethodBase):
         l_next = jnp.where(active, l_upd, state.l_local)
         g_next = jnp.where(mask, g_upd, state.g_local)
 
-        # server lines 18-20: aggregate diffs from active clients
-        h_global = state.h_global + jnp.mean(
-            jnp.where(maskm, self.alpha * s_i, 0.0), axis=0)
+        # server lines 18-20: aggregate diffs from active clients — the
+        # Hessian diffs arrive as payloads and are meaned in payload
+        # space, masked by zero-weighting inactive silos (a zero weight
+        # zeroes that silo's decoded contribution exactly)
+        h_global = state.h_global + self.alpha * self._server_aggregate(
+            payloads, (d, d), weights=active.astype(state.x.dtype))
         l_global = state.l_global + jnp.mean(jnp.where(active, l_upd - state.l_local, 0.0))
         g_global = state.g_global + jnp.mean(
             jnp.where(mask, g_upd - state.g_local, 0.0), axis=0)

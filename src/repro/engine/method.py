@@ -76,38 +76,68 @@ class MethodBase:
     payload wire helpers.
 
     Subclasses implement init/step/bits_per_round; ``run`` is the scan
-    loop every algorithm module used to duplicate, and
-    ``_compress_uplink`` / ``measured_bits_per_round`` are the payload
-    round-trip and measured accounting every compressed method shares.
+    loop every algorithm module used to duplicate. The uplink is split
+    the way the deployment is: ``_uplink_payloads`` (device side:
+    compress), ``_local_hessians`` (device side: each silo's OWN dense
+    S_i for its H_i update), ``_server_aggregate`` (server side: ONE
+    dense (d, d) mean straight from payload space — no silo's dense
+    matrix ever reaches the server, and no (n, d, d) stack is formed
+    there). ``measured_bits_per_round`` is the measured wire accounting
+    every compressed method shares.
     """
 
     traj_field: str = "x"
     silo_fields: tuple = ("h_local",)
 
-    def _compress_uplink(self, diff, silo_keys):
-        """The device -> server wire for stacked Hessian diffs: each
-        silo compresses its (d, d) diff to a payload; the server
-        decompresses back to dense S_i. One vmapped round-trip, shared
-        by every compressed method's ``step``."""
-        dec = lambda p: self.comp.decompress(p, diff.shape[1:])
-        return jax.vmap(dec)(jax.vmap(self.comp.compress)(diff, silo_keys))
+    def _uplink_payloads(self, diff, silo_keys):
+        """Device side: each silo compresses its own (d, d) Hessian
+        diff into the wire payload it uplinks (vmapped over the silo
+        axis; payload shapes are static)."""
+        return jax.vmap(self.comp.compress)(diff, silo_keys)
 
-    def measured_bits_per_round(self, d: int):
+    def _local_hessians(self, payloads, shape):
+        """Device side: each silo reconstructs its OWN dense S_i from
+        the payload it just built — the H_i^{k+1} = H_i^k + alpha S_i^k
+        update happens on-device, per silo, never aggregated."""
+        return jax.vmap(lambda p: self.comp.decompress(p, shape))(payloads)
+
+    def _server_aggregate(self, payloads, shape, weights=None):
+        """Server side: S^k = mean_i S_i^k computed in payload space
+        (``Compressor.aggregate`` — scatter-add / stacked factors /
+        direct mean, one dense accumulator total). ``weights`` rescales
+        per-silo contributions (partial participation masks with 0/1).
+        Under shard_map (``axis_name`` set) the cross-silo reduction
+        happens HERE, on the dense accumulator: one pmean of (d, d)."""
+        from ..core.compressors import scale_payload
+
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
+        s = self.comp.aggregate(payloads, shape)
+        axis = getattr(self, "axis_name", None)
+        if axis is not None:
+            s = jax.lax.pmean(s, axis)
+        return s
+
+    def measured_bits_per_round(self, d: int, index_coding: str = "raw"):
         """MEASURED per-round wire bits: the compressor's actual payload
         structure (via jax.eval_shape) plus the (d + 1) uncompressed
         floats every single-uplink FedNL variant ships (gradient-sized
         vector + one scalar), at the ambient float width — matches the
         analytic ``bits_per_round`` layout of FedNL/PP/CR/LS/Stochastic
-        under x64. Methods with a different wire layout (FedNL-BC,
-        FedNL-PPBC) override. Payload-free methods (Newton references)
-        return the analytic number: their wire IS dense FLOAT_BITS
-        floats, so the claim equals the wire count by construction."""
+        under x64. ``index_coding="entropy"`` charges the sparsifier
+        index streams their entropy-coded estimate (log2 C(d^2, k))
+        instead of k raw 32-bit ints. Methods with a different wire
+        layout (FedNL-BC, FedNL-PPBC) override. Payload-free methods
+        (Newton references) return the analytic number: their wire IS
+        dense FLOAT_BITS floats, so the claim equals the wire count by
+        construction."""
         comp = getattr(self, "comp", None)
         if comp is None:
             return self.bits_per_round(d)
         from ..core.compressors import canonical_float_bits, payload_bits
 
-        return payload_bits(comp, (d, d)) + (d + 1) * canonical_float_bits()
+        return (payload_bits(comp, (d, d), index_coding=index_coding)
+                + (d + 1) * canonical_float_bits())
 
     def run(self, x0, n, num_rounds, *args, seed: int = 0, **init_kw):
         """Run ``num_rounds`` communication rounds from ``x0``.

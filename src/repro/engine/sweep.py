@@ -110,6 +110,10 @@ class CellResult:
     bits_measured: Optional[np.ndarray] = None
                           # (num_rounds+1,) cumulative bits/node, measured
                           # from the method's payload structure
+    bits_entropy: Optional[np.ndarray] = None
+                          # (num_rounds+1,) cumulative bits/node with the
+                          # sparsifier index streams entropy-coded
+                          # (log2 C(d^2, k) accounting, no actual codec)
 
 
 @dataclass
@@ -203,6 +207,8 @@ class Sweep:
                 gaps=gaps,
                 bits=rec.bits_curve(method, d, spec.num_rounds),
                 bits_measured=rec.measured_bits_curve(
+                    method, d, spec.num_rounds),
+                bits_entropy=rec.entropy_bits_curve(
                     method, d, spec.num_rounds),
                 us_per_round=wall_us / max(1, spec.num_rounds),
             ))

@@ -3,6 +3,9 @@
   block_topk      — block-local Top-K contractive compressor (Def 3.3 with
                     delta = k/b^2); the TPU-native replacement for global
                     Top-K (A.3.3).
+  scatter_accum   — payload-space server aggregation: sum n silos' sparse
+                    payloads into ONE dense accumulator (one-hot-matmul
+                    scatter; backs ``Compressor.aggregate`` fast paths).
   hess_update     — fused H += alpha*S with the ||D - H||_F compression-
                     error reduction (l_i^k) in the same HBM pass.
   tiled_matmul    — MXU-tiled matmul used by the PowerSGD/Rank-R power

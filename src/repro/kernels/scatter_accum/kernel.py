@@ -1,0 +1,133 @@
+"""Pallas scatter-accumulate kernels — the server side of the FedNL
+uplink in payload space.
+
+The server's job per round is S = sum_i S_i where each S_i arrives as a
+sparse payload (values + indices). Instead of decompressing every silo
+to a dense (d, d) and meaning the (n, d, d) stack, these kernels keep
+ONE dense accumulator and scatter every silo's pairs into it.
+
+TPU VPUs have no native scatter, so the scatter is recast as MXU work:
+for a chunk of entries, build two one-hot matrices from the decomposed
+(row, col) indices — R[e, r] = [row_e == r] with the value folded in,
+C[e, c] = [col_e == c] — and the chunk's dense contribution is the
+matmul R^T @ C (each output cell sums exactly the entries addressing
+it, so accumulation of duplicate indices is automatic and exact in the
+accumulate dtype). Payload padding (index -1) yields row_e = -1, which
+matches no row one-hot and contributes zero.
+
+``scatter_accum_kernel``: global flat indices, grid over (silo, chunk)
+programs all revisiting the same full-matrix output block (init at
+program 0, accumulate after) — the standard Pallas revisiting-output
+reduction. Fits VMEM for d up to ~1500 f32; larger matrices belong to
+the block-sparse variant, whose accumulator is tiled by construction.
+
+``block_scatter_accum_kernel``: in-tile indices, one program per output
+tile, contraction over all n*k of that tile's pairs in one matmul pair.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _acc_dtype(dtype):
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def _onehot_contribution(vals, rows, cols, d0: int, d1: int, acc):
+    """Dense (d0, d1) sum of entries vals[e] at (rows[e], cols[e]) via
+    two one-hot matmuls; negative rows match nothing (padding)."""
+    ck = vals.shape[-1]
+    r2 = rows.reshape(ck, 1)
+    c2 = cols.reshape(ck, 1)
+    rio = jax.lax.broadcasted_iota(jnp.int32, (ck, d0), 1)
+    cio = jax.lax.broadcasted_iota(jnp.int32, (ck, d1), 1)
+    r_onehot = (r2 == rio).astype(acc) * vals.reshape(ck, 1).astype(acc)
+    c_onehot = (c2 == cio).astype(acc)
+    return jax.lax.dot_general(
+        r_onehot, c_onehot,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=acc)                     # (d0, d1)
+
+
+def _scatter_accum_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int):
+    """One (value, index) chunk of one silo; all programs revisit the
+    same full-matrix out block. ``d1`` is the UNPADDED column count the
+    flat indices were built against."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...]                                # (1, ck)
+    idx = idx_ref[...]                                  # (1, ck) int32
+    d0p, d1p = out_ref.shape
+    rows = idx // d1                                    # -1 -> -1 (no match)
+    cols = idx - rows * d1
+    acc = _acc_dtype(vals.dtype)
+    contrib = _onehot_contribution(vals, rows, cols, d0p, d1p, acc)
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+def scatter_accum_kernel(values: jax.Array, indices: jax.Array,
+                         out_shape, d1: int,
+                         interpret: bool = False) -> jax.Array:
+    """values/indices: (nchunks, ck) — silo payloads flattened into
+    fixed-size chunks (ops.py pads with value 0 / index -1). Returns the
+    (d0p, d1p) = ``out_shape`` dense SUM; ``d1`` is the unpadded column
+    count of the matrix the flat indices address."""
+    nchunks, ck = values.shape
+    return pl.pallas_call(
+        functools.partial(_scatter_accum_tile_kernel, d1=d1),
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((1, ck), lambda i: (i, 0)),
+            pl.BlockSpec((1, ck), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec(out_shape, lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(out_shape, values.dtype),
+        interpret=interpret,
+    )(values, indices)
+
+
+def _block_scatter_tile_kernel(vals_ref, idx_ref, out_ref, *, block: int):
+    """One output tile: scatter all n silos' k pairs for this tile in a
+    single one-hot matmul pair (contraction over n*k)."""
+    vals = vals_ref[...]                                # (n, 1, k)
+    idx = idx_ref[...]                                  # (n, 1, k) int32
+    n, _, k = vals.shape
+    flat_v = vals.reshape(1, n * k)
+    flat_i = idx.reshape(1, n * k)
+    rows = flat_i // block                              # -1 -> -1 (no match)
+    cols = flat_i - rows * block
+    acc = _acc_dtype(vals.dtype)
+    contrib = _onehot_contribution(flat_v, rows, cols, block, block, acc)
+    out_ref[...] = contrib.astype(out_ref.dtype)
+
+
+def block_scatter_accum_kernel(values: jax.Array, indices: jax.Array,
+                               grid, block: int,
+                               interpret: bool = False) -> jax.Array:
+    """values/indices: (n, nblocks, k) in the BlockSparsePayload layout
+    (row-major tiles, in-tile flat indices, -1 padding); nblocks must
+    equal gm*gn. Returns the (gm*block, gn*block) dense SUM."""
+    gm, gn = (int(g) for g in grid)
+    n, nblk, k = values.shape
+    assert nblk == gm * gn, (nblk, grid)
+    return pl.pallas_call(
+        functools.partial(_block_scatter_tile_kernel, block=block),
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((n, 1, k), lambda i, j: (0, i * gn + j, 0)),
+            pl.BlockSpec((n, 1, k), lambda i, j: (0, i * gn + j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * block, gn * block),
+                                       values.dtype),
+        interpret=interpret,
+    )(values, indices)

@@ -1,0 +1,79 @@
+"""Dispatching wrappers for payload-space scatter-accumulation.
+
+One op per payload family, both returning the dense SUM over silos from
+ONE accumulator (the caller divides by n for the server mean):
+
+  scatter_accumulate        — SparsePayload: global flat indices
+  block_scatter_accumulate  — BlockSparsePayload: per-tile indices
+
+On TPU the Pallas kernels run; elsewhere the pure-jnp oracle (a single
+XLA scatter-add) IS the fast path — interpret-mode Pallas would emulate
+the kernel body at Python speed on the hot loop of every step. Tests
+force the kernel body with ``use_pallas=True, interpret=True``."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import block_scatter_accum_kernel, scatter_accum_kernel
+from .ref import block_scatter_accumulate_ref, scatter_accumulate_ref
+
+_CHUNK = 512  # (value, index) pairs per kernel program
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@partial(jax.jit, static_argnames=("shape", "use_pallas", "interpret"))
+def scatter_accumulate(values: jax.Array, indices: jax.Array, shape,
+                       use_pallas: bool | None = None,
+                       interpret: bool | None = None) -> jax.Array:
+    """Dense (d0, d1) SUM of n sparse silo payloads.
+
+    values/indices: (n, k) per-silo (value, row-major flat index) pairs
+    into ``shape``; -1 indices (payload padding) are dropped; duplicate
+    indices accumulate. The whole accumulator lives in VMEM on the
+    Pallas path — suited to FedNL-scale (d, d) Hessian diffs, not
+    arbitrary matrices."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return scatter_accumulate_ref(values, indices, shape)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d0, d1 = (int(s) for s in shape)
+    n, k = values.shape
+    kp = _round_up(max(k, 1), _CHUNK) if k > _CHUNK else max(k, 1)
+    ck = min(kp, _CHUNK)
+    vals = jnp.pad(values, ((0, 0), (0, kp - k)))
+    idx = jnp.pad(indices, ((0, 0), (0, kp - k)), constant_values=-1)
+    # fixed-size chunks -> one grid program each, revisiting the output
+    nchunks = n * (kp // ck)
+    vals = vals.reshape(nchunks, ck)
+    idx = idx.reshape(nchunks, ck)
+    d0p, d1p = _round_up(d0, 8), _round_up(d1, 128)
+    out = scatter_accum_kernel(vals, idx, (d0p, d1p), d1,
+                               interpret=interpret)
+    return out[:d0, :d1]
+
+
+@partial(jax.jit, static_argnames=("grid", "block", "use_pallas",
+                                   "interpret"))
+def block_scatter_accumulate(values: jax.Array, indices: jax.Array, grid,
+                             block: int,
+                             use_pallas: bool | None = None,
+                             interpret: bool | None = None) -> jax.Array:
+    """Dense (gm*block, gn*block) SUM of n block-sparse silo payloads
+    ((n, nblocks, k) values/indices, BlockSparsePayload layout)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return block_scatter_accumulate_ref(values, indices, grid, block)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return block_scatter_accum_kernel(values, indices, grid, block,
+                                      interpret=interpret)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for payload-space server accumulation: sum n silos'
+sparse payloads into ONE dense accumulator (never an (n, d, d) stack).
+These are also the portable fast path on non-TPU backends — a single
+XLA scatter-add over all (value, index) pairs — while the Pallas
+kernels in kernel.py are the TPU path; ops.py dispatches."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_accumulate_ref(values: jax.Array, indices: jax.Array,
+                           shape) -> jax.Array:
+    """Dense (d0, d1) SUM of n sparse silo payloads.
+
+    values/indices: (n, k) — per-silo (value, global flat index) pairs,
+    row-major indices into ``shape``; -1/out-of-range indices (payload
+    padding) are dropped. Duplicate indices (across silos, or within
+    one after ties) accumulate additively — exactly the server sum.
+    Negative indices are remapped BEFORE the scatter (jax normalizes
+    them ahead of the mode="drop" bounds check)."""
+    d0, d1 = (int(s) for s in shape)
+    n_out = d0 * d1
+    idx = jnp.where(indices < 0, n_out, indices).reshape(-1)
+    flat = jnp.zeros((n_out,), values.dtype).at[idx].add(
+        values.reshape(-1), mode="drop")
+    return flat.reshape(d0, d1)
+
+
+def block_scatter_accumulate_ref(values: jax.Array, indices: jax.Array,
+                                 grid, block: int) -> jax.Array:
+    """Dense (gm*block, gn*block) SUM of n block-sparse silo payloads.
+
+    values/indices: (n, nblocks, k) — per-tile (value, in-tile flat
+    index) pairs with tiles in row-major grid order (the
+    ``BlockSparsePayload`` layout); nblocks must equal gm*gn. One
+    (nblocks, block^2) accumulator total: each tile scatter-adds all
+    n*k of its pairs, then tiles are laid back into the dense grid."""
+    gm, gn = (int(g) for g in grid)
+    bb = block * block
+    nblk = values.shape[-2]
+    v = jnp.moveaxis(values, -2, 0).reshape(nblk, -1)   # (nblk, n*k)
+    i = jnp.moveaxis(indices, -2, 0).reshape(nblk, -1)
+    i = jnp.where(i < 0, bb, i)
+    tiles = jax.vmap(
+        lambda vv, ii: jnp.zeros((bb,), values.dtype).at[ii].add(
+            vv, mode="drop"))(v, i)
+    return tiles.reshape(gm, gn, block, block).transpose(0, 2, 1, 3) \
+        .reshape(gm * block, gn * block)

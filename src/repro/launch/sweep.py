@@ -1,8 +1,9 @@
 """CLI front-end for the experiment engine: run a method x level x seed
 grid on a named problem from the command line, optionally sharded over
 the host mesh, and print tidy records (or a per-cell summary) as CSV —
-records carry the analytic ``bits`` and the payload-measured
-``bits_measured`` columns side by side.
+records carry the analytic ``bits``, the payload-measured
+``bits_measured``, and the entropy-index-coded ``bits_entropy``
+columns side by side.
 
     PYTHONPATH=src python -m repro.launch.sweep \
         --problem a1a --method fednl --compressor rankr --levels 1,2,4 \

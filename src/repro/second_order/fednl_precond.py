@@ -23,7 +23,13 @@ its D_i^k before uplink (the paper's accounting); inside a single pod the
 data-parallel all-reduce is dense, so the compressed learning rule is
 applied to the aggregated D^k. The contraction argument (Lemma B.1 with
 y = aggregated observation) is unchanged; DESIGN.md §3 records this
-deviation.
+deviation. Both placements now speak the payload wire format: the
+single-pod path compresses the aggregated observation into ONE payload
+and updates H from it, and when ``observations`` carry a leading silo
+axis (one observation per silo — the paper's placement) each silo
+compresses its own diff and H is updated from the server-side
+payload-space mean (``Compressor.aggregate`` — no per-silo dense
+decompression, the same aggregation subsystem the core methods use).
 
 Update rule per tensor (Option-2 Newton-type step, diagonal solve):
 
@@ -98,22 +104,40 @@ class FedNLPrecondOptimizer:
             z, hz)
 
     def update(self, grads, state: FedNLPrecondState, params, observations=None):
+        """``observations`` leaves may carry a leading silo axis (ndim ==
+        param.ndim + 1): then each silo's diff is compressed on-device
+        and H learns from the payload-space server mean."""
         comp = self.compressor
+
+        def _rms(t):
+            return jnp.sqrt(jnp.mean(t * t) + 1e-30)
+
         obs = observations if observations is not None else self.observe(grads)
 
         def per_tensor(g, h, m, p, d_obs):
             g32 = g.astype(jnp.float32)
-            diff = d_obs - h
-            # l^k correction (Option 2), scale-matched to the diagonal
-            l = jnp.sqrt(jnp.mean(diff * diff) + 1e-30)
+            h2 = _as2d(h)
+            if d_obs.ndim == h.ndim + 1:
+                # cross-silo: per-silo payloads, ONE dense accumulator
+                diff_i = d_obs.astype(jnp.float32) - h[None]
+                diff2 = diff_i.reshape((diff_i.shape[0],) + h2.shape)
+                payloads = jax.vmap(lambda t: comp.compress(t))(diff2)
+                s = comp.aggregate(payloads, h2.shape).reshape(h.shape)
+                # l^k = mean_i ||D_i - H||_F, scale-matched (Option 2)
+                l = jnp.mean(jax.vmap(_rms)(diff_i))
+            else:
+                diff = d_obs - h
+                # the uplink object is the payload; H learns from it
+                payload = comp.compress(_as2d(diff))
+                s = comp.decompress(payload, h2.shape).reshape(h.shape)
+                # l^k correction (Option 2), scale-matched to the diagonal
+                l = _rms(diff)
             denom = jnp.sqrt(jnp.maximum(h, 0.0)) + jnp.sqrt(l) + self.eps
             step = g32 / denom
             if self.weight_decay:
                 step = step + self.weight_decay * p.astype(jnp.float32)
             m_new = self.momentum * m + step
             u = (-self.lr * m_new).astype(p.dtype)
-            # compressed Hessian learning (reshape to 2D for Block-TopK)
-            s = comp(_as2d(diff)).reshape(h.shape)
             h_new = h + self.alpha * s
             return u, h_new, m_new
 
