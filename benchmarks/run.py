@@ -17,7 +17,9 @@ with a ``us_per_round`` column per cell.
   fig9_pp           FedNL-PP tau sweep + vs Artemis
   fig14_heterogeneity  synthetic(alpha, beta) sweep
   table2_rates      Thm 3.6 / NS / N0 rate checks
-  server_aggregate  payload-space aggregate vs decompress-then-mean (n x d)
+  server_aggregate  payload-space aggregate vs decompress-then-mean (n x d,
+                    incl. the tiled-accumulator large-d sweep)
+  precond_step      fednl_precond payload-op path vs dense-mask path
   engine_vmap       multi-seed vmap speedup vs serial per-seed loops
   roofline          (arch x shape) table from the dry-run JSONL
 
@@ -464,8 +466,10 @@ def payload_roundtrip(fast=False):
                       f"bits={measured}")
 
     # Pallas payload op agrees with the jnp codec's decompressed matrix
+    # (kernel body forced — the off-TPU dispatch is the jnp oracle)
     bt = cases["blocktopk"][0]
-    vals, idx = block_topk_payload(m, k=64, block=128)
+    vals, idx = block_topk_payload(m, k=64, block=128, use_pallas=True,
+                                   interpret=True)
     kernel_dense = payload_to_dense(vals, idx, m.shape, block=128)
     codec_dense = bt.decompress(bt.compress(m), m.shape)
     ok_kernel = bool(jnp.all(kernel_dense == codec_dense))
@@ -482,14 +486,21 @@ def server_aggregate(fast=False):
     stack of compressed (d, d) Hessian-diff payloads, time the
     structure-aware ``Compressor.aggregate`` fast path (one dense
     accumulator) against the decompress-then-mean fallback (the
-    (n, d, d) stack the PR-2 era server built), over an n x d sweep.
-    Claims: the two agree to f64 tolerance everywhere, and the sparse
-    fast paths (TopK scatter-add, BlockTopK per-tile scatter-add) are
-    >= 2x at n >= 32, d >= 256."""
+    (n, d, d) stack the PR-2 era server built), over an n x d sweep —
+    now including LLM-diagonal-scale d in {1024, 2048, 4096}, where the
+    Pallas path runs the TILED accumulator kernel (the single-block
+    ceiling was d ~ 1500). Claims: fast == fallback to f64 tolerance
+    everywhere, the sparse fast paths are >= 2x at n >= 32, d >= 256,
+    and the forced tiled kernel reproduces the fallback exactly at
+    every large d (d = 2048 in --fast — the CI smoke case)."""
     from repro.core import BlockTopK, Compressor, RankR, TopK
+    from repro.kernels.scatter_accum import scatter_accumulate
 
     shapes = [(8, 128), (32, 256)] if fast else [
         (8, 256), (32, 256), (32, 512), (64, 512)]
+    # large-d sweep: modest n and k keep the interpret-mode tiled kernel
+    # (CPU) affordable; on TPU the same dispatch compiles the real thing
+    big = [(2, 2048)] if fast else [(2, 1024), (2, 2048), (2, 4096)]
 
     def bench(fn, arg, reps=10):
         out = jax.block_until_ready(fn(arg))  # compile
@@ -500,7 +511,33 @@ def server_aggregate(fast=False):
         return out, (time.time() - t0) * 1e6 / reps
 
     rows, fields = [], []
-    ok_match, ok_speed, us_total = True, True, 0.0
+    ok_match, ok_speed, ok_tiled, us_total = True, True, True, 0.0
+    for n, d in big:
+        comp = TopK(k=256)
+        diffs = jax.random.normal(jax.random.PRNGKey(0), (n, d, d))
+        payloads = jax.block_until_ready(
+            jax.jit(jax.vmap(comp.compress))(diffs))
+        fallback = jax.jit(lambda P, c=comp, dd=d: Compressor.aggregate(
+            c, P, (dd, dd)))
+        fast_fn = jax.jit(lambda P, c=comp, dd=d: c.aggregate(P, (dd, dd)))
+        out_slow, us_slow = bench(fallback, payloads)
+        out_fast, us_fast = bench(fast_fn, payloads)
+        # pin exactness of the TILED Pallas kernel (forced via tile= —
+        # at d=1024 the f64 accumulator is exactly the 8 MiB budget, so
+        # auto-dispatch would still pick the single-block kernel)
+        tiled = scatter_accumulate(payloads.values, payloads.indices,
+                                   (d, d), use_pallas=True,
+                                   interpret=jax.default_backend() != "tpu",
+                                   tile=(512, 512)) / n
+        scale = float(jnp.max(jnp.abs(out_slow))) + 1e-30
+        err = float(jnp.max(jnp.abs(out_fast - out_slow)))
+        err_t = float(jnp.max(jnp.abs(tiled - out_slow)))
+        speedup = us_slow / max(us_fast, 1e-9)
+        ok_match &= err <= 1e-12 * max(1.0, scale)
+        ok_tiled &= err_t <= 1e-12 * max(1.0, scale)
+        us_total += us_fast
+        rows.append((n, d, "topk-tiled", us_slow, us_fast, speedup, err))
+        fields.append(f"n{n}d{d}:topk={speedup:.1f}x;tiled_err={err_t:.1e}")
     for n, d in shapes:
         diffs = jax.random.normal(jax.random.PRNGKey(0), (n, d, d))
         diffs = 0.5 * (diffs + jnp.swapaxes(diffs, -1, -2))
@@ -537,7 +574,78 @@ def server_aggregate(fast=False):
     report("server_aggregate", us_total,
            "|".join(fields)
            + f"|claim_fast_matches_fallback={ok_match}"
-           f"|claim_sparse_speedup_ge_2x={ok_speed}")
+           f"|claim_sparse_speedup_ge_2x={ok_speed}"
+           f"|claim_tiled_matches_fallback={ok_tiled}")
+
+
+def precond_step(fast=False):
+    """second_order/fednl_precond update micro-benchmark: the payload-op
+    path (compress through the payload-emitting op, H reconstructed via
+    the payload-space scatter — the shipped code) vs the PR-3-era
+    dense-mask path (codec compress building (nblocks, block^2)
+    selection masks + dense decompress round-trip inside every step),
+    on a (d, d) parameter tensor. Claim: the payload path is no slower
+    at d >= 1024 (off-TPU both are jnp; on TPU the payload path is the
+    Pallas kernel) and the two paths learn the same H on tie-free
+    data."""
+    from repro.second_order.fednl_precond import (FedNLPrecondOptimizer,
+                                                  _as2d)
+
+    ds = [1024] if fast else [1024, 2048]
+
+    def bench(fn, *args, reps=5):
+        out = jax.block_until_ready(fn(*args))  # compile
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return out, (time.time() - t0) * 1e6 / reps
+
+    rows, fields = [], []
+    ok_speed, ok_match, us_total = True, True, 0.0
+    for d in ds:
+        opt = FedNLPrecondOptimizer(lr=1e-3, k_per_block=2048, block=128)
+        comp = opt.compressor
+        params = {"w": jnp.zeros((d, d), jnp.float32)}
+        grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (d, d),
+                                        jnp.float32)}
+        state = opt.init(params)
+
+        def dense_mask_update(g, s):
+            # the PR-3-era per-tensor body: codec round-trip (compress
+            # builds the dense per-tile selection masks)
+            h = s.h["w"]
+            diff = g["w"].astype(jnp.float32) ** 2 - h
+            sd = comp.decompress(comp.compress(_as2d(diff)),
+                                 _as2d(h).shape).reshape(h.shape)
+            l = jnp.sqrt(jnp.mean(diff * diff) + 1e-30)
+            denom = jnp.sqrt(jnp.maximum(h, 0.0)) + jnp.sqrt(l) + opt.eps
+            m_new = opt.momentum * s.mu["w"] + g["w"] / denom
+            return (-opt.lr * m_new,
+                    type(s)(s.step + 1, {"w": h + opt.alpha * sd},
+                            {"w": m_new}))
+
+        payload_fn = jax.jit(lambda g, s: opt.update(g, s, params))
+        dense_fn = jax.jit(dense_mask_update)
+        (_, st_p), us_payload = bench(payload_fn, grads, state)
+        (_, st_d), us_dense = bench(dense_fn, grads, state)
+        err = float(jnp.max(jnp.abs(st_p.h["w"] - st_d.h["w"])))
+        speedup = us_dense / max(us_payload, 1e-9)
+        if d >= 1024:
+            ok_speed &= speedup >= 0.95  # "no slower" with timer noise
+        ok_match &= err <= 1e-5
+        us_total += us_payload
+        rows.append((d, us_dense, us_payload, speedup, err))
+        fields.append(f"d{d}:payload={us_payload:.0f}us;"
+                      f"densemask={us_dense:.0f}us;{speedup:.1f}x")
+
+    write_csv("precond_step",
+              ["d", "us_dense_mask", "us_payload", "speedup", "max_h_err"],
+              rows)
+    report("precond_step", us_total,
+           "|".join(fields)
+           + f"|claim_payload_not_slower={ok_speed}"
+           f"|claim_same_h={ok_match}")
 
 
 def engine_vmap(fast=False):
@@ -597,8 +705,8 @@ def roofline(fast=False):
 
 BENCHES = [fig2_local, fig2_global, fig2_nl1, fig3_compression, fig4_options,
            fig6_update_rules, fig7_bc, fig9_pp, fig14_heterogeneity,
-           table2_rates, payload_roundtrip, server_aggregate, engine_vmap,
-           roofline]
+           table2_rates, payload_roundtrip, server_aggregate, precond_step,
+           engine_vmap, roofline]
 
 
 def main() -> None:

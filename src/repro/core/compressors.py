@@ -36,8 +36,10 @@ consumes the *stacked* payloads of all n silos (leading silo axis, as
 produced by ``jax.vmap(comp.compress)``) and returns the dense mean
 ``S = mean_i S_i`` directly from payload space — scatter-add into one
 (d, d) accumulator for the sparsifiers (Pallas kernel on TPU:
-``kernels/scatter_accum``), one stacked-factor matmul for the low-rank
-family, a direct mean for dense/dithered wires. The generic fallback is
+``kernels/scatter_accum``, which tiles the accumulator once the padded
+matrix outgrows its VMEM budget, so the fast path holds at any d), one
+stacked-factor matmul for the low-rank family, a direct mean for
+dense/dithered wires. The generic fallback is
 decompress-then-mean; ``scale_payload`` reweights per-silo
 contributions (zero weight = silo absent), which is how partial
 participation masks the aggregate.
@@ -280,8 +282,9 @@ def scale_payload(payload, w: jax.Array):
 
 def _sparse_aggregate(payloads: "SparsePayload", shape) -> jax.Array:
     """mean_i of stacked SparsePayloads via ONE dense accumulator
-    (kernels/scatter_accum: Pallas one-hot-matmul scatter on TPU, a
-    single XLA scatter-add elsewhere). -1 padding is dropped; duplicate
+    (kernels/scatter_accum: Pallas one-hot-matmul scatter on TPU —
+    single-block or output-tiled by VMEM budget, so any d — a single
+    XLA scatter-add elsewhere). -1 padding is dropped; duplicate
     indices across silos accumulate — exactly the server sum."""
     from ..kernels.scatter_accum import scatter_accumulate
 
@@ -519,18 +522,21 @@ class _BlockSparse(Compressor):
             out, idx, payload.values)
         return _from_tiles(out, shape, b)
 
-    def aggregate(self, payloads: BlockSparsePayload, shape) -> jax.Array:
+    def aggregate(self, payloads: BlockSparsePayload, shape,
+                  use_pallas: Optional[bool] = None) -> jax.Array:
         """Per-tile scatter-add of all n silos' pairs into ONE tiled
         accumulator (kernels/scatter_accum block kernel on TPU), then
         crop and mean — tiles are disjoint, so the tile-local sums ARE
-        the dense sum."""
+        the dense sum. ``use_pallas`` threads through to the kernel
+        dispatch (None = auto by backend); fednl_precond uses it to
+        pin its jaxpr-inspected TPU path."""
         from ..kernels.scatter_accum import block_scatter_accumulate
 
         b = self.block
         n = payloads.values.shape[0]
         gm, gn = -(-int(shape[0]) // b), -(-int(shape[1]) // b)
         total = block_scatter_accumulate(payloads.values, payloads.indices,
-                                         (gm, gn), b)
+                                         (gm, gn), b, use_pallas=use_pallas)
         return total[:shape[0], :shape[1]] / n
 
     def spec(self, shape) -> CompSpec:

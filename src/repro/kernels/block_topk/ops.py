@@ -4,7 +4,13 @@ kernels (interpret=True on CPU so the kernel body itself is what runs).
 ``block_topk`` returns the dense masked matrix (seed-era format);
 ``block_topk_payload`` returns the wire format — per-tile (values,
 indices) arrays matching ``repro.core.compressors.BlockSparsePayload``
-— without ever materializing the dense compressed matrix."""
+— without ever materializing the dense compressed matrix. On TPU the
+payload op runs the Pallas kernel; elsewhere the sort-based jnp oracle
+IS the fast path (interpret-mode Pallas would run the kernel body at
+interpreter speed inside every optimizer step). The two paths agree
+exactly on tie-free data; under bisection-resolution ties the kernel
+keeps boundary ties in flat order while the oracle keeps the sort
+order — both exactly k entries per tile."""
 
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import block_topk_kernel, block_topk_payload_kernel
+from .ref import block_topk_payload_ref
 
 
 @partial(jax.jit, static_argnames=("k", "block", "interpret"))
@@ -28,17 +35,25 @@ def block_topk(x: jax.Array, k: int, block: int = 128,
     return out[:m, :n] if (pm or pn) else out
 
 
-@partial(jax.jit, static_argnames=("k", "block", "interpret"))
+@partial(jax.jit, static_argnames=("k", "block", "use_pallas",
+                                   "interpret"))
 def block_topk_payload(x: jax.Array, k: int, block: int = 128,
+                       use_pallas: bool | None = None,
                        interpret: bool | None = None):
     """Compressed payload of ``x``: (values, indices), both
     (ceil(m/block) * ceil(n/block), min(k, block**2)); tiles in row-major
-    grid order, in-tile flat indices, empty slots at index -1."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    grid order, in-tile flat indices, empty slots at index -1. Pallas
+    kernel on TPU, jnp oracle elsewhere (see module docstring); tests
+    force the kernel body with ``use_pallas=True, interpret=True``."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
     m, n = x.shape
     pm, pn = (-m) % block, (-n) % block
     xp = jnp.pad(x, ((0, pm), (0, pn))) if (pm or pn) else x
     k = min(k, block * block)
+    if not use_pallas:
+        return block_topk_payload_ref(xp, k=k, block=block)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     return block_topk_payload_kernel(xp, k=k, block=block,
                                      interpret=interpret)

@@ -1,2 +1,3 @@
+from .kernel import scatter_accum_tiled_kernel
 from .ops import block_scatter_accumulate, scatter_accumulate
 from .ref import block_scatter_accumulate_ref, scatter_accumulate_ref

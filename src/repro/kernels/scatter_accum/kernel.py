@@ -18,8 +18,18 @@ matches no row one-hot and contributes zero.
 ``scatter_accum_kernel``: global flat indices, grid over (silo, chunk)
 programs all revisiting the same full-matrix output block (init at
 program 0, accumulate after) — the standard Pallas revisiting-output
-reduction. Fits VMEM for d up to ~1500 f32; larger matrices belong to
-the block-sparse variant, whose accumulator is tiled by construction.
+reduction. Fits VMEM for d up to ~1500 f32 only; ops.py dispatches to
+it when the whole accumulator fits a VMEM budget.
+
+``scatter_accum_tiled_kernel``: the same chunked pair stream, but the
+output is a 2-D grid of (tm, tn) tiles with the chunk axis innermost —
+each (row-tile, col-tile) program streams every (silo, chunk) pair and
+contributes only its in-window entries (the index range test is free:
+tile-local coordinates outside [0, tile) match no one-hot column). Only
+ONE output tile is ever resident in VMEM, so arbitrary d scales; each
+pair is re-examined once per tile, which is the classic compute-for-
+memory trade of a tiled scatter (the one-hot matmuls are MXU work
+either way).
 
 ``block_scatter_accum_kernel``: in-tile indices, one program per output
 tile, contraction over all n*k of that tile's pairs in one matmul pair.
@@ -91,6 +101,60 @@ def scatter_accum_kernel(values: jax.Array, indices: jax.Array,
         ],
         out_specs=pl.BlockSpec(out_shape, lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct(out_shape, values.dtype),
+        interpret=interpret,
+    )(values, indices)
+
+
+def _scatter_accum_tiled_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int):
+    """One (row-tile, col-tile, chunk) program: contribute this chunk's
+    in-window entries to the (tm, tn) output tile. The chunk axis is the
+    innermost grid dim, so each output tile is revisited consecutively
+    over the whole (silo, chunk) pair stream while staying resident in
+    VMEM — the accumulator never exists as one full (d0, d1) block."""
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tm, tn = out_ref.shape
+    vals = vals_ref[...]                                # (1, ck)
+    idx = idx_ref[...]                                  # (1, ck) int32
+    rows = idx // d1                                    # -1 -> -1
+    cols = idx - rows * d1
+    # shift into tile-local coordinates: entries outside this tile's
+    # [row0, row0+tm) x [col0, col0+tn) window — including -1 padding,
+    # whose row is negative — match no one-hot column and contribute 0
+    row0 = pl.program_id(0) * tm
+    col0 = pl.program_id(1) * tn
+    acc = _acc_dtype(vals.dtype)
+    contrib = _onehot_contribution(vals, rows - row0, cols - col0,
+                                   tm, tn, acc)
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+def scatter_accum_tiled_kernel(values: jax.Array, indices: jax.Array,
+                               out_shape, d1: int, tile,
+                               interpret: bool = False) -> jax.Array:
+    """Tiled variant of ``scatter_accum_kernel``: same (nchunks, ck)
+    chunked pair stream, but the output is produced as a 2-D grid of
+    (tm, tn) = ``tile`` blocks so VMEM holds one tile, not the matrix.
+    ``out_shape`` must be a multiple of ``tile`` in both dims (ops.py
+    pads); ``d1`` is the unpadded column count the flat indices address.
+    """
+    nchunks, ck = values.shape
+    d0p, d1p = (int(s) for s in out_shape)
+    tm, tn = (int(t) for t in tile)
+    assert d0p % tm == 0 and d1p % tn == 0, (out_shape, tile)
+    return pl.pallas_call(
+        functools.partial(_scatter_accum_tiled_tile_kernel, d1=d1),
+        grid=(d0p // tm, d1p // tn, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, ck), lambda i, j, c: (c, 0)),
+            pl.BlockSpec((1, ck), lambda i, j, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d0p, d1p), values.dtype),
         interpret=interpret,
     )(values, indices)
 

@@ -18,27 +18,41 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import block_scatter_accum_kernel, scatter_accum_kernel
+from .kernel import (block_scatter_accum_kernel, scatter_accum_kernel,
+                     scatter_accum_tiled_kernel)
 from .ref import block_scatter_accumulate_ref, scatter_accumulate_ref
 
 _CHUNK = 512  # (value, index) pairs per kernel program
+
+# Single-block vs tiled dispatch: the single-block kernel holds the
+# whole padded accumulator in ONE VMEM block, which is only legal while
+# it fits this budget (8 MiB of the ~16 MiB/core VMEM, leaving room for
+# the chunk one-hots); beyond it the tiled kernel streams the pair
+# stream per (tm, tn) output tile, so arbitrary d scales.
+_VMEM_ACC_BUDGET_BYTES = 8 * 1024 * 1024
+_TILE = (512, 512)  # default tiled-path output block (1 MiB f32)
 
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-@partial(jax.jit, static_argnames=("shape", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("shape", "use_pallas", "interpret",
+                                   "tile"))
 def scatter_accumulate(values: jax.Array, indices: jax.Array, shape,
                        use_pallas: bool | None = None,
-                       interpret: bool | None = None) -> jax.Array:
+                       interpret: bool | None = None,
+                       tile=None) -> jax.Array:
     """Dense (d0, d1) SUM of n sparse silo payloads.
 
     values/indices: (n, k) per-silo (value, row-major flat index) pairs
     into ``shape``; -1 indices (payload padding) are dropped; duplicate
-    indices accumulate. The whole accumulator lives in VMEM on the
-    Pallas path — suited to FedNL-scale (d, d) Hessian diffs, not
-    arbitrary matrices."""
+    indices accumulate. On the Pallas path the accumulator lives in ONE
+    VMEM block while the padded matrix fits ``_VMEM_ACC_BUDGET_BYTES``
+    and is otherwise tiled into (tm, tn) output blocks (the chunk pair
+    stream replayed per tile) — any d stays in VMEM. ``tile`` forces
+    the tiled kernel with that (tm, tn) block (tm a multiple of 8, tn
+    of 128); None means budget-dispatch with the default tile."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:
@@ -55,9 +69,20 @@ def scatter_accumulate(values: jax.Array, indices: jax.Array, shape,
     nchunks = n * (kp // ck)
     vals = vals.reshape(nchunks, ck)
     idx = idx.reshape(nchunks, ck)
-    d0p, d1p = _round_up(d0, 8), _round_up(d1, 128)
-    out = scatter_accum_kernel(vals, idx, (d0p, d1p), d1,
-                               interpret=interpret)
+    acc_bytes = (_round_up(d0, 8) * _round_up(d1, 128)
+                 * jnp.dtype(values.dtype).itemsize)
+    if tile is None and acc_bytes > _VMEM_ACC_BUDGET_BYTES:
+        tile = _TILE
+    if tile is None:
+        d0p, d1p = _round_up(d0, 8), _round_up(d1, 128)
+        out = scatter_accum_kernel(vals, idx, (d0p, d1p), d1,
+                                   interpret=interpret)
+    else:
+        tm = _round_up(int(tile[0]), 8)
+        tn = _round_up(int(tile[1]), 128)
+        d0p, d1p = _round_up(d0, tm), _round_up(d1, tn)
+        out = scatter_accum_tiled_kernel(vals, idx, (d0p, d1p), d1,
+                                         (tm, tn), interpret=interpret)
     return out[:d0, :d1]
 
 

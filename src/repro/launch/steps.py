@@ -32,7 +32,9 @@ def make_optimizer(name: str, lr: float, moment_dtype=None, **kw):
         opt = FedNLPrecondOptimizer(lr=lr, **kw)
         from repro.second_order.optim import Optimizer
 
-        return Optimizer(opt.init, lambda g, s, p: opt.update(g, s, p))
+        # bind update directly: the optional observations 4th arg (the
+        # cross-silo payload path) must survive the adapter
+        return Optimizer(opt.init, opt.update)
     raise ValueError(name)
 
 

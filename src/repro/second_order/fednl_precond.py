@@ -23,19 +23,30 @@ its D_i^k before uplink (the paper's accounting); inside a single pod the
 data-parallel all-reduce is dense, so the compressed learning rule is
 applied to the aggregated D^k. The contraction argument (Lemma B.1 with
 y = aggregated observation) is unchanged; DESIGN.md §3 records this
-deviation. Both placements now speak the payload wire format: the
-single-pod path compresses the aggregated observation into ONE payload
-and updates H from it, and when ``observations`` carry a leading silo
-axis (one observation per silo — the paper's placement) each silo
-compresses its own diff and H is updated from the server-side
-payload-space mean (``Compressor.aggregate`` — no per-silo dense
-decompression, the same aggregation subsystem the core methods use).
+deviation. Both placements speak the payload wire format end to end:
+compression goes through the payload-emitting op
+(``kernels/block_topk.block_topk_payload`` — the Pallas kernel on TPU,
+the sort-based jnp oracle elsewhere) and the dense H increment is
+reconstructed through the payload-space scatter
+(``kernels/scatter_accum.block_scatter_accumulate``), so the training
+step materializes neither a dense (nblocks, block^2) selection mask nor
+a per-silo dense decompression round-trip. When ``observations`` carry
+a leading silo axis (one observation per silo — the paper's placement)
+each silo compresses its own diff and H is updated from the server-side
+payload-space mean — the same aggregation subsystem the core methods
+use.
 
 Update rule per tensor (Option-2 Newton-type step, diagonal solve):
 
     l^k   = ||D^k - H^k||_F / sqrt(numel)        (scale-matched ridge)
-    u     = -lr * g / (max(H^k, 0) + l^k + eps)
+    u     = -lr * g / (sqrt(max(H^k, 0)) + sqrt(l^k) + eps)
     H^{k+1} = H^k + alpha * C(D^k - H^k)
+
+The sqrt denominator is deliberate (pinned by tests/test_infra.py):
+H tracks *squared*-gradient curvature (Fisher / Hutchinson-GGN), so
+sqrt(H) is the gradient's natural scale — the Adam/AdaGrad-consistent
+diagonal Newton step — and the ridge enters as sqrt(l) so both terms
+live in the same units.
 """
 
 from __future__ import annotations
@@ -46,7 +57,9 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import BlockTopK, BlockTopKThreshold
+from repro.core.compressors import (BlockSparsePayload, BlockTopK,
+                                    BlockTopKThreshold)
+from repro.kernels.block_topk import block_topk_payload
 from .optim import Optimizer, OptState
 
 
@@ -75,15 +88,24 @@ class FedNLPrecondOptimizer:
     weight_decay: float = 0.0
     curvature: str = "fisher"          # fisher | hutchinson
     selector: str = "threshold"        # threshold (bisection) | sort
+    use_pallas: Optional[bool] = None  # None = auto (Pallas ops on TPU)
+
+    def _k(self) -> int:
+        return min(self.k_per_block, self.block * self.block)
 
     @property
     def compressor(self):
-        k = min(self.k_per_block, self.block * self.block)
+        """The Block-TopK codec — the analytic Def 3.3 operator
+        (``spec``/delta accounting and the aggregate reference).
+        ``update`` itself routes compression through the payload op,
+        whose selection matches ``threshold`` (bisection, the Pallas
+        kernel) on TPU and ``sort`` (jax.lax.top_k) elsewhere — the two
+        differ only inside bisection-resolution tie clusters."""
         if self.selector == "threshold":
             # §Perf pair 3: bisection selection (the Pallas kernel's
             # algorithm) instead of a per-tile sort inside every step.
-            return BlockTopKThreshold(k_per_block=k, block=self.block)
-        return BlockTopK(k_per_block=k, block=self.block)
+            return BlockTopKThreshold(k_per_block=self._k(), block=self.block)
+        return BlockTopK(k_per_block=self._k(), block=self.block)
 
     def init(self, params) -> FedNLPrecondState:
         z32 = lambda p: jnp.zeros(p.shape, jnp.float32)
@@ -95,19 +117,43 @@ class FedNLPrecondOptimizer:
 
     def observe(self, grads, params=None, hvp=None):
         """Local curvature observation D^k per tensor."""
-        if self.curvature == "fisher" or hvp is None:
-            return jax.tree.map(lambda g: g.astype(jnp.float32) ** 2, grads)
-        # hutchinson: caller supplies hvp = Hessian @ z and the probe z
-        z, hz = hvp
-        return jax.tree.map(
-            lambda zz, hh: (zz.astype(jnp.float32) * hh.astype(jnp.float32)),
-            z, hz)
+        if self.curvature == "hutchinson":
+            if hvp is None:
+                raise ValueError(
+                    "curvature='hutchinson' requires the hvp=(z, Hz) "
+                    "probe (one Hessian-vector product per step); got "
+                    "hvp=None — refusing to silently fall back to the "
+                    "Fisher diagonal")
+            # hutchinson: caller supplies hvp = Hessian @ z and the probe z
+            z, hz = hvp
+            return jax.tree.map(
+                lambda zz, hh: (zz.astype(jnp.float32)
+                                * hh.astype(jnp.float32)), z, hz)
+        return jax.tree.map(lambda g: g.astype(jnp.float32) ** 2, grads)
 
-    def update(self, grads, state: FedNLPrecondState, params, observations=None):
+    def _compress_payload(self, x2d: jax.Array):
+        """Device-side compress of one 2D diff into the
+        BlockSparsePayload arrays via the payload-emitting op: the step
+        never materializes a dense (nblocks, block^2) selection mask on
+        the Pallas path."""
+        return block_topk_payload(x2d, k=self._k(), block=self.block,
+                                  use_pallas=self.use_pallas)
+
+    def _payload_mean(self, vals: jax.Array, idx: jax.Array, shape2):
+        """Dense mean of n stacked per-silo payloads through the one
+        payload-space aggregation (``_BlockSparse.aggregate`` — the
+        tiled-by-construction block scatter kernel on TPU): no per-silo
+        dense decompression, ONE accumulator."""
+        payloads = BlockSparsePayload(values=vals, indices=idx,
+                                      universe=self.block * self.block)
+        return self.compressor.aggregate(payloads, tuple(shape2),
+                                         use_pallas=self.use_pallas)
+
+    def update(self, grads, state: FedNLPrecondState, params,
+               observations=None):
         """``observations`` leaves may carry a leading silo axis (ndim ==
         param.ndim + 1): then each silo's diff is compressed on-device
         and H learns from the payload-space server mean."""
-        comp = self.compressor
 
         def _rms(t):
             return jnp.sqrt(jnp.mean(t * t) + 1e-30)
@@ -121,15 +167,16 @@ class FedNLPrecondOptimizer:
                 # cross-silo: per-silo payloads, ONE dense accumulator
                 diff_i = d_obs.astype(jnp.float32) - h[None]
                 diff2 = diff_i.reshape((diff_i.shape[0],) + h2.shape)
-                payloads = jax.vmap(lambda t: comp.compress(t))(diff2)
-                s = comp.aggregate(payloads, h2.shape).reshape(h.shape)
+                vals, idx = jax.vmap(self._compress_payload)(diff2)
+                s = self._payload_mean(vals, idx, h2.shape).reshape(h.shape)
                 # l^k = mean_i ||D_i - H||_F, scale-matched (Option 2)
                 l = jnp.mean(jax.vmap(_rms)(diff_i))
             else:
                 diff = d_obs - h
                 # the uplink object is the payload; H learns from it
-                payload = comp.compress(_as2d(diff))
-                s = comp.decompress(payload, h2.shape).reshape(h.shape)
+                vals, idx = self._compress_payload(_as2d(diff))
+                s = self._payload_mean(vals[None], idx[None],
+                                       h2.shape).reshape(h.shape)
                 # l^k correction (Option 2), scale-matched to the diagonal
                 l = _rms(diff)
             denom = jnp.sqrt(jnp.maximum(h, 0.0)) + jnp.sqrt(l) + self.eps
@@ -148,6 +195,9 @@ class FedNLPrecondOptimizer:
 
 
 def fednl_precond(lr: float = 1e-3, **kw) -> Optimizer:
-    """Adapter matching the Optimizer(init, update) protocol."""
+    """Adapter matching the Optimizer(init, update) protocol. ``update``
+    is bound directly (NOT wrapped in a 3-arg lambda) so the optional
+    ``observations`` 4th argument — the cross-silo payload path —
+    reaches the optimizer through the protocol."""
     opt = FedNLPrecondOptimizer(lr=lr, **kw)
-    return Optimizer(opt.init, lambda g, s, p: opt.update(g, s, p))
+    return Optimizer(opt.init, opt.update)

@@ -29,8 +29,15 @@ class OptState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
+    """``update`` is ``(grads, state, params, observations=None) ->
+    (updates, state)``. The optional 4th argument carries per-silo
+    curvature observations for optimizers that learn from them
+    (``second_order/fednl_precond`` — a leading silo axis routes the
+    cross-silo payload-aggregation path); first-order optimizers accept
+    and ignore it, and plain 3-arg calls keep working everywhere."""
+
     init: Callable
-    update: Callable  # (grads, state, params) -> (updates, state)
+    update: Callable
 
 
 def apply_updates(params, updates):
@@ -42,7 +49,7 @@ def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimize
         mu = jax.tree.map(jnp.zeros_like, params) if momentum else ()
         return OptState(jnp.zeros((), jnp.int32), mu, ())
 
-    def update(grads, state, params):
+    def update(grads, state, params, observations=None):
         if weight_decay:
             grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
         if momentum:
@@ -67,7 +74,7 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         return OptState(jnp.zeros((), jnp.int32),
                         jax.tree.map(z, params), jax.tree.map(z, params))
 
-    def update(grads, state, params):
+    def update(grads, state, params, observations=None):
         step = state.step + 1
         c1 = 1.0 - b1 ** step.astype(jnp.float32)
         c2 = 1.0 - b2 ** step.astype(jnp.float32)

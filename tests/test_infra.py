@@ -19,7 +19,8 @@ from repro.data.libsvm import parse_libsvm, partition_across_silos
 from repro.data.synthetic import make_iid, make_libsvm_like, make_synthetic
 from repro.data.tokens import TokenPipeline
 from repro.second_order import adamw, fednl_precond, sgd
-from repro.second_order.fednl_precond import FedNLPrecondOptimizer
+from repro.second_order.fednl_precond import (FedNLPrecondOptimizer,
+                                              FedNLPrecondState)
 from repro.second_order.optim import apply_updates
 
 
@@ -122,6 +123,102 @@ def test_fednl_precond_learns_curvature():
         _, state = opt.update(grads, state, params)
     # observation D = g^2 = 4; k_per_block=64 = whole block => exact learn
     np.testing.assert_allclose(np.asarray(state.h["w"]), 4.0, atol=1e-5)
+
+
+def test_fednl_precond_hutchinson_without_probe_raises():
+    """Regression: curvature='hutchinson' with no hvp probe used to
+    silently fall back to the Fisher diagonal — it must refuse, naming
+    the missing probe."""
+    opt = FedNLPrecondOptimizer(curvature="hutchinson")
+    grads = {"w": jnp.ones((4, 4))}
+    with pytest.raises(ValueError, match="hvp"):
+        opt.observe(grads)
+    with pytest.raises(ValueError, match="hutchinson"):
+        opt.update(grads, opt.init(grads), grads)  # observe() inside
+    # with the probe supplied, D = z * (H z)
+    z = {"w": jnp.full((4, 4), 2.0)}
+    hz = {"w": jnp.full((4, 4), 3.0)}
+    obs = opt.observe(grads, hvp=(z, hz))
+    np.testing.assert_allclose(np.asarray(obs["w"]), 6.0)
+
+
+def test_fednl_precond_update_rule_matches_docstring():
+    """Numeric pin of the documented Option-2 step
+        l = ||D - H||_F / sqrt(numel)
+        u = -lr * g / (sqrt(max(H, 0)) + sqrt(l) + eps)
+    — the sqrt (Adam-consistent) denominator, including the max(H, 0)
+    clamp on a negative curvature entry. momentum=0 and alpha=0 isolate
+    the raw preconditioned step."""
+    lr, eps = 0.2, 1e-8
+    opt = FedNLPrecondOptimizer(lr=lr, alpha=0.0, momentum=0.0,
+                                k_per_block=64, block=8, eps=eps)
+    h0 = jnp.array([[4.0, 9.0], [-2.0, 0.0]])
+    g = jnp.array([[1.0, -2.0], [3.0, 4.0]])
+    params = {"w": jnp.zeros((2, 2))}
+    state = FedNLPrecondState(jnp.zeros((), jnp.int32), {"w": h0},
+                              {"w": jnp.zeros((2, 2))})
+    obs = {"w": jnp.full((2, 2), 5.0)}
+    upd, _ = opt.update({"w": g}, state, params, observations=obs)
+    l = np.linalg.norm(np.asarray(obs["w"] - h0)) / 2.0  # /sqrt(numel=4)
+    want = -lr * np.asarray(g) / (np.sqrt(np.maximum(np.asarray(h0), 0.0))
+                                  + np.sqrt(l) + eps)
+    np.testing.assert_allclose(np.asarray(upd["w"]), want, rtol=1e-5)
+
+
+def _jaxpr_has_blocksq_intermediate(jaxpr, bb: int) -> bool:
+    """Walk a (closed) jaxpr recursively — skipping pallas_call bodies,
+    whose in-kernel tiles are VMEM-resident by construction — and
+    report whether any equation emits an array with a block^2 trailing
+    dim (the dense selection mask / dense scatter round-trip)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.outvars:
+            shape = getattr(v.aval, "shape", ())
+            if shape and int(shape[-1]) == bb:
+                return True
+        for p in eqn.params.values():
+            for sub in jax.tree.leaves(
+                    p, is_leaf=lambda x: hasattr(x, "eqns")
+                    or hasattr(x, "jaxpr")):
+                if (hasattr(sub, "eqns") or hasattr(sub, "jaxpr")) \
+                        and _jaxpr_has_blocksq_intermediate(sub, bb):
+                    return True
+    return False
+
+
+def test_fednl_precond_pallas_path_builds_no_dense_selection_mask():
+    """Acceptance: with the Pallas payload ops forced (the TPU path,
+    trace-only so it runs anywhere), the jaxpr of ``update`` contains
+    no intermediate with a block^2 = 16384 trailing dim outside
+    pallas_call bodies — neither the dense selection mask nor the dense
+    per-tile scatter round-trip exists in the training step. The codec
+    compress (the PR-3-era path) is the positive control proving the
+    detector sees such masks."""
+    d, block = 256, 128
+    bb = block * block
+    opt = FedNLPrecondOptimizer(lr=0.1, k_per_block=32, block=block,
+                                use_pallas=True)
+    params = {"w": jnp.zeros((d, d))}
+    state = opt.init(params)
+    grads = {"w": jnp.ones((d, d))}
+
+    single = jax.make_jaxpr(
+        lambda g, s: opt.update(g, s, params))(grads, state)
+    assert not _jaxpr_has_blocksq_intermediate(single, bb)
+
+    obs = {"w": jnp.ones((3, d, d))}
+    silo = jax.make_jaxpr(
+        lambda g, s, o: opt.update(g, s, params, observations=o))(
+            grads, state, obs)
+    assert not _jaxpr_has_blocksq_intermediate(silo, bb)
+
+    # positive control: the jnp codec DOES build (nblocks, block^2)
+    comp = opt.compressor
+    codec = jax.make_jaxpr(lambda m: comp.decompress(
+        comp.compress(m), m.shape))(grads["w"])
+    assert _jaxpr_has_blocksq_intermediate(codec, bb)
 
 
 # -- shard_map federated runtime -------------------------------------------------

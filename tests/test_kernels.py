@@ -66,7 +66,8 @@ def test_block_topk_payload_matches_ref(shape, k):
     entrywise (values AND indices, flat in-tile order) and reconstructs
     the dense kernel's output exactly."""
     x = jax.random.normal(jax.random.PRNGKey(0), shape)
-    vals, idx = block_topk_payload(x, k=k, block=128)
+    vals, idx = block_topk_payload(x, k=k, block=128, use_pallas=True,
+                                   interpret=True)
     m, n = shape
     pm, pn = (-m) % 128, (-n) % 128
     xp = jnp.pad(x, ((0, pm), (0, pn)))
@@ -84,7 +85,8 @@ def test_block_topk_payload_vmap_over_silos():
     payload shapes."""
     stack = jax.random.normal(jax.random.PRNGKey(2), (3, 256, 130))
     pad = jnp.pad(stack, ((0, 0), (0, 0), (0, (-130) % 128)))
-    vv, ii = jax.vmap(lambda m: block_topk_payload(m, k=32, block=128))(stack)
+    vv, ii = jax.vmap(lambda m: block_topk_payload(
+        m, k=32, block=128, use_pallas=True, interpret=True))(stack)
     rv, ri = jax.vmap(
         lambda m: block_topk_payload_ref(m, k=32, block=128))(pad)
     assert vv.shape == (3, 2 * 2, 32) and ii.dtype == jnp.int32
@@ -98,7 +100,8 @@ def test_block_topk_payload_tie_cluster_keeps_exactly_k():
     through -1 padding; the kernel's two-phase fill keeps exactly k."""
     t = jnp.zeros((128, 128)).at[:4, :4].set(
         jnp.full((4, 4), 1.0).at[0, 0].set(1.0001))
-    vals, idx = block_topk_payload(t, k=3, block=128)
+    vals, idx = block_topk_payload(t, k=3, block=128, use_pallas=True,
+                                   interpret=True)
     dense = payload_to_dense(vals, idx, (128, 128), block=128)
     kept = np.asarray(dense) != 0
     assert kept.sum() == 3
@@ -116,18 +119,37 @@ def test_block_topk_payload_matches_compressor_payload():
 
     x = jax.random.normal(jax.random.PRNGKey(3), (256, 256))
     comp = BlockTopK(k_per_block=64, block=128)
-    vals, idx = block_topk_payload(x, k=64, block=128)
+    vals, idx = block_topk_payload(x, k=64, block=128, use_pallas=True,
+                                   interpret=True)
     via_kernel = payload_to_dense(vals, idx, x.shape, block=128)
     via_codec = comp.decompress(comp.compress(x), x.shape)
     np.testing.assert_array_equal(np.asarray(via_kernel),
                                   np.asarray(via_codec))
 
 
+def test_block_topk_payload_dispatch_oracle_matches_kernel():
+    """The off-TPU dispatch path (use_pallas=False -> sort-based jnp
+    oracle) emits the same payload as the forced Pallas kernel body on
+    tie-free data — the two backends of the one payload op agree."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (300, 123))
+    kv, ki = block_topk_payload(x, k=48, block=128, use_pallas=True,
+                                interpret=True)
+    ov, oi = block_topk_payload(x, k=48, block=128, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(oi))
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(ov))
+
+
+# None -> single-block kernel; (8, 128) -> forced tiled kernel (multi-
+# tile grids even on the small test shapes)
+SCATTER_PATHS = [None, (8, 128)]
+
+
+@pytest.mark.parametrize("tile", SCATTER_PATHS)
 @pytest.mark.parametrize("shape", [(37, 41), (128, 128), (1, 300)])
 @pytest.mark.parametrize("k", [7, 700])
-def test_scatter_accum_matches_ref(shape, k):
-    """The Pallas scatter-accumulate kernel (one-hot-matmul scatter into
-    a revisited dense accumulator, chunked over silos x entries) agrees
+def test_scatter_accum_matches_ref(shape, k, tile):
+    """The Pallas scatter-accumulate kernels (one-hot-matmul scatter,
+    chunked over silos x entries; single-block and output-tiled) agree
     with the XLA scatter-add oracle, including duplicate indices across
     silos and -1 payload padding."""
     n = 4
@@ -137,23 +159,103 @@ def test_scatter_accum_matches_ref(shape, k):
                              d0 * d1).astype(jnp.int32)
     idx = idx.at[:, -2:].set(-1)  # padding slots with nonzero values
     out = scatter_accumulate(vals, idx, shape, use_pallas=True,
-                             interpret=True)
+                             interpret=True, tile=tile)
     ref = scatter_accumulate_ref(vals, idx, shape)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=0, atol=1e-5)
 
 
-def test_scatter_accum_accumulates_duplicates():
+@pytest.mark.parametrize("tile", SCATTER_PATHS)
+def test_scatter_accum_accumulates_duplicates(tile):
     """Every silo addressing the same cell: the accumulator must sum all
     of them (the server S = sum_i S_i semantics), not keep the last."""
     vals = jnp.ones((5, 3))
     idx = jnp.zeros((5, 3), jnp.int32).at[:, 1].set(7).at[:, 2].set(-1)
     out = scatter_accumulate(vals, idx, (2, 4), use_pallas=True,
-                             interpret=True)
+                             interpret=True, tile=tile)
     expect = np.zeros((2, 4))
     expect[0, 0] = 5.0
     expect[1, 3] = 5.0
     np.testing.assert_allclose(np.asarray(out), expect, rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("tile", SCATTER_PATHS)
+@pytest.mark.parametrize("shape", [(37, 41), (17, 200)])
+def test_scatter_accum_k_not_chunk_multiple(shape, tile):
+    """k that is neither a _CHUNK multiple nor below it (513, 700 with
+    _CHUNK=512) forces the zero/-1 chunk padding on both kernels; the
+    padded tail must contribute nothing."""
+    n = 3
+    d0, d1 = shape
+    for k in (513, 700):
+        vals = jax.random.normal(jax.random.PRNGKey(k), (n, k))
+        idx = jax.random.randint(jax.random.PRNGKey(k + 1), (n, k), 0,
+                                 d0 * d1).astype(jnp.int32)
+        out = scatter_accumulate(vals, idx, shape, use_pallas=True,
+                                 interpret=True, tile=tile)
+        ref = scatter_accumulate_ref(vals, idx, shape)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", SCATTER_PATHS)
+def test_scatter_accum_duplicates_across_silos_and_chunks(tile):
+    """The same flat cell addressed by every silo AND from both sides of
+    a chunk boundary (k=600 > _CHUNK=512 splits each silo's stream into
+    two kernel programs) must accumulate every contribution."""
+    n, k, shape = 3, 600, (37, 41)
+    target = 5 * 41 + 7  # one fixed cell
+    vals = jax.random.normal(jax.random.PRNGKey(0), (n, k))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (n, k), 0,
+                             shape[0] * shape[1]).astype(jnp.int32)
+    # first and last slot of every silo -> same cell (slot 599 lands in
+    # the second chunk after padding to 1024)
+    idx = idx.at[:, 0].set(target).at[:, -1].set(target)
+    out = scatter_accumulate(vals, idx, shape, use_pallas=True,
+                             interpret=True, tile=tile)
+    ref = scatter_accumulate_ref(vals, idx, shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+    expect_cell = float(jnp.sum(jnp.where(idx == target, vals, 0.0)))
+    assert abs(float(out[5, 7]) - expect_cell) < 1e-4
+
+
+@pytest.mark.parametrize("tile", SCATTER_PATHS)
+def test_scatter_accum_all_padding_silo(tile):
+    """A silo whose payload is entirely -1 padding (an absent
+    participant) contributes exactly zero even with nonzero values."""
+    n, k, shape = 4, 20, (17, 31)
+    vals = jax.random.normal(jax.random.PRNGKey(2), (n, k))
+    idx = jax.random.randint(jax.random.PRNGKey(3), (n, k), 0,
+                             shape[0] * shape[1]).astype(jnp.int32)
+    idx = idx.at[1, :].set(-1)
+    out = scatter_accumulate(vals, idx, shape, use_pallas=True,
+                             interpret=True, tile=tile)
+    ref = scatter_accumulate_ref(vals, idx, shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+    without = scatter_accumulate_ref(
+        jnp.delete(vals, 1, axis=0), jnp.delete(idx, 1, axis=0), shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(without),
+                               rtol=0, atol=1e-5)
+
+
+def test_scatter_accum_auto_tiles_above_vmem_budget():
+    """Dispatch: a padded accumulator above the VMEM budget (f32
+    1600x1664 > 8 MiB) silently routes to the tiled kernel and still
+    matches the oracle — the d ~ 1500 single-block ceiling is gone."""
+    from repro.kernels.scatter_accum.ops import _VMEM_ACC_BUDGET_BYTES
+
+    n, k, shape = 2, 64, (1600, 1664)
+    assert shape[0] * shape[1] * 4 > _VMEM_ACC_BUDGET_BYTES
+    vals = jax.random.normal(jax.random.PRNGKey(4), (n, k))
+    idx = jax.random.randint(jax.random.PRNGKey(5), (n, k), 0,
+                             shape[0] * shape[1]).astype(jnp.int32)
+    out = scatter_accumulate(vals, idx, shape, use_pallas=True,
+                             interpret=True)
+    ref = scatter_accumulate_ref(vals, idx, shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-5)
 
 
 @pytest.mark.parametrize("grid", [(1, 1), (2, 3)])
