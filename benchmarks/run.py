@@ -17,6 +17,8 @@ with a ``us_per_round`` column per cell.
   fig9_pp           FedNL-PP tau sweep + vs Artemis
   fig14_heterogeneity  synthetic(alpha, beta) sweep
   table2_rates      Thm 3.6 / NS / N0 rate checks
+  codec_roundtrip   bitstream codec encode/decode per payload family:
+                    bytes vs entropy estimate, fp32 bit-exact pin
   server_aggregate  payload-space aggregate vs decompress-then-mean (n x d,
                     incl. the tiled-accumulator large-d sweep)
   precond_step      fednl_precond payload-op path vs dense-mask path
@@ -481,6 +483,76 @@ def payload_roundtrip(fast=False):
            f"|claim_pallas_payload_matches_codec={ok_kernel}")
 
 
+def codec_roundtrip(fast=False):
+    """Bitstream codec micro-benchmark: for one payload per family,
+    host-side encode/decode throughput, actual wire bytes vs the
+    ``bits_entropy`` accounting estimate, and the round-trip pins. The
+    fp32 ``value_format="raw"`` path must be BIT-exact against
+    ``canonical(payload)`` for every family, and the Golomb–Rice index
+    coder must land within 1.1x of the entropy estimate for TopK (the
+    estimate is a lower-bound-style count; the codec pays real container
+    and rice-parameter overhead)."""
+    from repro.core import BlockTopK, NaturalSparsification
+    from repro.wire import canonical, decode, encode, wire_cost
+
+    d = 32 if fast else 128
+    key = jax.random.PRNGKey(1)
+    m32 = jax.random.normal(jax.random.PRNGKey(0), (d, d), jnp.float32)
+
+    cases = {
+        "topk": TopK(k=4 * d),
+        "blocktopk": BlockTopK(k_per_block=8, block=16),
+        "rankr": RankR(4),
+        "natural": NaturalSparsification(p=0.25),
+        "dithering": RandomDithering(s=8),
+    }
+
+    def bit_equal(a, b):
+        la = jax.tree_util.tree_leaves(a)
+        lb = jax.tree_util.tree_leaves(b)
+        if len(la) != len(lb):
+            return False
+        for x, y in zip(la, lb):
+            x, y = np.asarray(x), np.asarray(y)
+            if x.dtype != y.dtype or x.shape != y.shape:
+                return False
+            if x.tobytes() != y.tobytes():  # bitwise: -0.0 != +0.0 here
+                return False
+        return True
+
+    def bench_host(fn, *args, reps=10):
+        out = fn(*args)  # warm (device->host pull, rice param search)
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(*args)
+        return out, (time.time() - t0) * 1e6 / reps
+
+    rows, fields = [], []
+    ok_exact, ok_topk_entropy, us_total = True, True, 0.0
+    for name, comp in cases.items():
+        payload = jax.block_until_ready(comp.compress(m32, key))
+        buf, us_enc = bench_host(encode, payload)
+        dec, us_dec = bench_host(decode, buf, (d, d))
+        exact = bit_equal(dec, canonical(payload))
+        ok_exact &= exact
+        rep = wire_cost(comp, (d, d), dtype=jnp.float32)
+        if name == "topk":
+            ok_topk_entropy = rep.encoded_bits <= 1.1 * rep.entropy_bits
+        us_total += us_enc + us_dec
+        rows.append((name, len(buf), rep.raw_bits, rep.entropy_bits,
+                     us_enc, us_dec))
+        fields.append(f"{name}:bytes={len(buf)};entropy={rep.entropy_bits};"
+                      f"us_enc={us_enc:.0f};us_dec={us_dec:.0f}")
+
+    write_csv("codec_roundtrip",
+              ["family", "encoded_bytes", "raw_bits", "entropy_bits",
+               "us_encode", "us_decode"], rows)
+    report("codec_roundtrip", us_total,
+           "|".join(fields)
+           + f"|claim_fp32_roundtrip_exact={ok_exact}"
+           f"|claim_topk_encoded_le_1p1x_entropy={ok_topk_entropy}")
+
+
 def server_aggregate(fast=False):
     """Payload-space server aggregation micro-benchmark: for an n-silo
     stack of compressed (d, d) Hessian-diff payloads, time the
@@ -705,8 +777,8 @@ def roofline(fast=False):
 
 BENCHES = [fig2_local, fig2_global, fig2_nl1, fig3_compression, fig4_options,
            fig6_update_rules, fig7_bc, fig9_pp, fig14_heterogeneity,
-           table2_rates, payload_roundtrip, server_aggregate, precond_step,
-           engine_vmap, roofline]
+           table2_rates, payload_roundtrip, codec_roundtrip, server_aggregate,
+           precond_step, engine_vmap, roofline]
 
 
 def main() -> None:

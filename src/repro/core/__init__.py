@@ -44,3 +44,17 @@ from .objectives import (
     global_value,
     lipschitz_constants,
 )
+
+#: wire-cost names re-exported lazily: ``repro.wire`` imports this
+#: package's ``compressors`` submodule, so a top-level ``from ..wire
+#: import ...`` here would be a cycle. Module __getattr__ defers the
+#: import until first access.
+_WIRE_NAMES = ("WireReport", "wire_cost")
+
+
+def __getattr__(name):
+    if name in _WIRE_NAMES:
+        from .. import wire
+
+        return getattr(wire, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -97,6 +97,56 @@ def canonical_float_bits() -> int:
 # dims so a payload vmapped over a silo axis still reports per-silo bits.
 
 
+class Payload:
+    """Shared wire-object surface: the one place the ``bits`` signature
+    (and its ``index_coding`` semantics) is defined.
+
+    ``index_coding="raw"`` counts index streams at INDEX_BITS per entry;
+    ``"entropy"`` swaps them for the ``ceil(log2 C(universe, k))``
+    information-cost estimate. Only the families that *carry* an index
+    stream are affected — Sparse, BlockSparse, and indexed Dense
+    payloads, which implement ``_entropy_bits``. LowRank, Dithered, and
+    unindexed Dense payloads have no index stream, so for them the
+    argument is a documented no-op (``_entropy_bits`` returns None and
+    the raw count is the only count), not a silently-ignored kwarg
+    copy-pasted per class.
+
+    Prefer ``repro.wire.wire_cost(comp, shape)`` for cost queries — it
+    returns every accounting (analytic / raw / entropy / actual encoded
+    bytes) in one ``WireReport``; ``bits()`` remains as the per-payload
+    primitive underneath it.
+    """
+
+    def bits(self, index_coding: str = "raw") -> int:
+        """Wire size in bits of ONE payload (trailing dims — a stacked
+        payload reports per-silo bits). See the class docstring for
+        ``index_coding``."""
+        if index_coding not in ("raw", "entropy"):
+            raise ValueError(
+                f"index_coding must be 'raw' or 'entropy', "
+                f"got {index_coding!r}")
+        if index_coding == "entropy":
+            eb = self._entropy_bits()
+            if eb is not None:
+                return eb
+        return self._raw_bits()
+
+    def _raw_bits(self) -> int:
+        raise NotImplementedError
+
+    def _entropy_bits(self) -> Optional[int]:
+        """Entropy-coded size, or None for families without an index
+        stream (the ``index_coding`` no-ops)."""
+        return None
+
+    def encode(self, value_format: str = "raw") -> bytes:
+        """Serialize this payload to actual wire bytes via the bitstream
+        codec (``repro.wire.codec.encode``)."""
+        from ..wire.codec import encode as _encode
+
+        return _encode(self, value_format=value_format)
+
+
 def _entropy_index_bits(k: int, universe: int) -> int:
     """Information cost of an (unordered) k-subset of ``universe`` slots:
     ceil(log2 C(universe, k)) — the k*log2(d^2/k)-style accounting an
@@ -113,12 +163,12 @@ def _entropy_index_bits(k: int, universe: int) -> int:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
-class SparsePayload:
+class SparsePayload(Payload):
     """k (value, flat-index) pairs. Indices may be -1 (padding slots,
     dropped on decompress). ``universe`` is the number of addressable
     slots the indices were drawn from (d^2, or the triangle count for
     symmetric operators) — static metadata captured at compress time,
-    consumed only by the entropy-coded bits estimate."""
+    consumed by the entropy-coded bits estimate and the codec header."""
 
     values: jax.Array   # (..., k)
     indices: jax.Array  # (..., k) int32
@@ -131,17 +181,21 @@ class SparsePayload:
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
-    def bits(self, index_coding: str = "raw") -> int:
+    def _raw_bits(self) -> int:
         k = int(self.values.shape[-1])
-        if index_coding == "entropy" and self.universe:
-            return (k * _dtype_bits(self.values)
-                    + _entropy_index_bits(k, self.universe))
         return k * (_dtype_bits(self.values) + _dtype_bits(self.indices))
+
+    def _entropy_bits(self) -> Optional[int]:
+        if not self.universe:
+            return None
+        k = int(self.values.shape[-1])
+        return (k * _dtype_bits(self.values)
+                + _entropy_index_bits(k, self.universe))
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
-class BlockSparsePayload:
+class BlockSparsePayload(Payload):
     """k (value, in-tile flat index) pairs per (block x block) tile, tiles
     in row-major grid order — the Pallas block_topk kernel's native
     output format."""
@@ -149,7 +203,7 @@ class BlockSparsePayload:
     values: jax.Array   # (..., nblocks, k)
     indices: jax.Array  # (..., nblocks, k) int32
     universe: int = dataclasses.field(metadata=dict(static=True), default=0)
-    # ^ addressable slots per tile (block^2); entropy accounting only
+    # ^ addressable slots per tile (block^2)
 
     def tree_flatten(self):
         return (self.values, self.indices), (self.universe,)
@@ -158,20 +212,25 @@ class BlockSparsePayload:
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
-    def bits(self, index_coding: str = "raw") -> int:
+    def _raw_bits(self) -> int:
         nblk, k = (int(s) for s in self.values.shape[-2:])
-        if index_coding == "entropy" and self.universe:
-            return nblk * (k * _dtype_bits(self.values)
-                           + _entropy_index_bits(k, self.universe))
-        return nblk * k * (_dtype_bits(self.values) + _dtype_bits(self.indices))
+        return nblk * k * (_dtype_bits(self.values)
+                           + _dtype_bits(self.indices))
+
+    def _entropy_bits(self) -> Optional[int]:
+        if not self.universe:
+            return None
+        nblk, k = (int(s) for s in self.values.shape[-2:])
+        return nblk * (k * _dtype_bits(self.values)
+                       + _entropy_index_bits(k, self.universe))
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
-class LowRankPayload:
+class LowRankPayload(Payload):
     """Rank-R factors: dense = (left * middle) @ right.T (eigh/SVD style,
     middle of size r) or (left @ right.T) * middle[0] (PowerSGD, middle a
-    single rescale float)."""
+    single rescale float). No index stream (see ``Payload.bits``)."""
 
     left: jax.Array    # (..., d0, r)
     right: jax.Array   # (..., d1, r)
@@ -184,8 +243,7 @@ class LowRankPayload:
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
-    def bits(self, index_coding: str = "raw") -> int:
-        # no index stream — index_coding accepted for API uniformity
+    def _raw_bits(self) -> int:
         d0, r = (int(s) for s in self.left.shape[-2:])
         d1 = int(self.right.shape[-2])
         mid = int(self.middle.shape[-1])
@@ -194,14 +252,15 @@ class LowRankPayload:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
-class DensePayload:
+class DensePayload(Payload):
     """A dense array shipped as-is. ``count`` is the number of entries
     charged on the wire and ``indexed`` whether each also ships an index
     — Bernoulli sparsification stores its (dense-layout) masked values
     here but is charged its *expected* occupancy int(p * numel), the one
     documented payload whose measured bits are an expectation rather
     than a per-draw count (occupancy is a random variate, so a static
-    wire size cannot equal it draw-by-draw)."""
+    wire size cannot equal it draw-by-draw; the codec, which may be
+    data-dependent, encodes the *actual* occupied slots)."""
 
     values: jax.Array
     count: int = dataclasses.field(metadata=dict(static=True), default=0)
@@ -215,22 +274,27 @@ class DensePayload:
     def tree_unflatten(cls, aux, children):
         return cls(children[0], *aux)
 
-    def bits(self, index_coding: str = "raw") -> int:
+    def _raw_bits(self) -> int:
         vbits = self.count * _dtype_bits(self.values)
         if not self.indexed:
             return vbits
-        if index_coding == "entropy" and self.universe:
-            return vbits + _entropy_index_bits(self.count, self.universe)
         return vbits + self.count * INDEX_BITS
+
+    def _entropy_bits(self) -> Optional[int]:
+        if not (self.indexed and self.universe):
+            return None
+        return (self.count * _dtype_bits(self.values)
+                + _entropy_index_bits(self.count, self.universe))
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
-class DitheredPayload:
+class DitheredPayload(Payload):
     """Random-dithering wire object: one q-norm float plus, per entry, a
     sign bit and a quantization level in {0..s}. Levels/signs are stored
     as (integer-valued) floats for exact reconstruction; ``bits()``
-    charges the paper's encoded width 1 + ceil(log2(s+1)) per entry."""
+    charges the paper's encoded width 1 + ceil(log2(s+1)) per entry.
+    Dense level stream — no index stream (see ``Payload.bits``)."""
 
     norm: jax.Array     # (..., 1)
     signs: jax.Array    # (..., *shape)
@@ -245,8 +309,7 @@ class DitheredPayload:
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
-    def bits(self, index_coding: str = "raw") -> int:
-        # dense level stream, no index stream
+    def _raw_bits(self) -> int:
         level_bits = max(1, math.ceil(math.log2(self.s + 1)))
         return _dtype_bits(self.norm) + self.count * (1 + level_bits)
 
@@ -360,8 +423,27 @@ class Compressor:
         raise NotImplementedError
 
     def bits(self, shape) -> int:
-        """Analytic wire bits for one application (= spec(shape).bits)."""
+        """Analytic wire bits for one application (= spec(shape).bits).
+
+        DEPRECATED alias: prefer ``repro.wire.wire_cost(comp,
+        shape).analytic_bits``, which returns this number alongside the
+        measured/entropy/encoded ones in a single ``WireReport``."""
         return self.spec(shape).bits
+
+    def encode(self, payload, value_format: str = "raw") -> bytes:
+        """Serialize ONE payload of this compressor to wire bytes via
+        the bitstream codec (dispatch lives in ``repro.wire.codec``,
+        keyed on the payload family)."""
+        from ..wire.codec import encode as _encode
+
+        return _encode(payload, value_format=value_format)
+
+    def decode(self, data: bytes, shape=None):
+        """Deserialize wire bytes back into this compressor's payload
+        (host numpy arrays; feed to ``decompress`` as-is or via jnp)."""
+        from ..wire.codec import decode as _decode
+
+        return _decode(data, shape=shape)
 
 
 def payload_bits(comp: Compressor, shape, dtype=None,
@@ -372,7 +454,12 @@ def payload_bits(comp: Compressor, shape, dtype=None,
     compare with ``comp.spec(shape).bits``, the paper's analytic claim
     at FLOAT_BITS=64. ``index_coding="entropy"`` swaps the raw 32-bit
     index streams for their log2 C(universe, k) information cost
-    (payloads without an index stream are unchanged)."""
+    (payloads without an index stream are unchanged).
+
+    DEPRECATED alias: prefer ``repro.wire.wire_cost(comp, shape)``,
+    whose ``raw_bits`` / ``entropy_bits`` fields are exactly this
+    function at the two index codings (and whose ``encoded_bytes`` is
+    the real codec's output, which this estimate approximates)."""
     if dtype is None:
         dtype = jnp.result_type(float)
     m = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
@@ -857,8 +944,11 @@ class NaturalSparsification(Compressor):
 
     def compress(self, x: jax.Array, key: jax.Array = None) -> DensePayload:
         assert key is not None
-        mask = jax.random.bernoulli(key, self.p, x.shape).astype(x.dtype)
-        return DensePayload(values=x * mask / self.p,
+        mask = jax.random.bernoulli(key, self.p, x.shape)
+        # where(), not x*mask/p: the masked-out entries must be clean
+        # +0.0, or the codec's bit-level occupancy test charges -0.0
+        # slots for every dropped negative entry.
+        return DensePayload(values=jnp.where(mask, x / self.p, 0.0),
                             count=int(self.p * numel(x.shape)), indexed=True,
                             universe=numel(x.shape))
 

@@ -5,8 +5,11 @@ of a sweep carries an analytic bits curve (``bits_curve``) AND a
 measured one (``measured_bits_curve`` — per-round wire sizes derived
 from the compressor payload structure via ``measured_bits_per_round``)
 next to its gap curve, so figure code reduces to "plot records" and a
-divergence between claim and wire is visible per row. ``records``
-flattens a sweep into a list of plain dicts (one row per
+divergence between claim and wire is visible per row. A fourth column,
+``seconds_per_round``, prices the measured wire through the traffic
+model (``repro.wire.traffic`` — link presets, straggler-dominated
+synchronous rounds), turning the bits x-axis into simulated wall-clock.
+``records`` flattens a sweep into a list of plain dicts (one row per
 (cell, seed, round)) — trivially convertible to CSV or a dataframe.
 """
 
@@ -88,6 +91,31 @@ def entropy_bits_curve(method, d: int, num_rounds: int) -> np.ndarray:
     return init_bits(method, d) + per * np.arange(num_rounds + 1)
 
 
+def seconds_per_round(method, d: int, n: int, link="wan",
+                      seed: int = 0) -> float:
+    """Simulated wall-clock seconds for ONE synchronous round: the
+    method's MEASURED per-round wire bits priced through the traffic
+    model (``repro.wire.traffic.round_seconds``) for an ``n``-silo
+    cohort on ``link`` (a preset name or ``LinkModel``). The server
+    waits for the straggler, so heterogeneous links make ``n`` matter."""
+    from ..wire.traffic import round_seconds
+
+    per = measured_bits_per_round(method, d)
+    return round_seconds(per, link, n=n, seed=seed)
+
+
+def seconds_curve(method, d: int, n: int, num_rounds: int, link="wan",
+                  seed: int = 0) -> np.ndarray:
+    """(num_rounds+1,) cumulative simulated seconds — the time-domain
+    twin of ``measured_bits_curve`` (same per-round wire size, priced
+    by the traffic model; the one-time init ship is charged too)."""
+    from ..wire import traffic
+
+    return traffic.seconds_curve(
+        measured_bits_per_round(method, d), link, n, num_rounds,
+        init_bits=init_bits(method, d), seed=seed)
+
+
 def bits_to_accuracy(gap_curve, bits: np.ndarray, target: float) -> float:
     """First cumulative-bits value at which gap <= target (inf if never)."""
     gap_curve = np.asarray(gap_curve)
@@ -115,6 +143,8 @@ def cell_records(cell) -> list[dict]:
     entropy = getattr(cell, "bits_entropy", None)
     if entropy is None:
         entropy = measured
+    spr = getattr(cell, "seconds_per_round", None)
+    spr = float("nan") if spr is None else float(spr)
     rows = []
     for si, seed in enumerate(spec.seeds):
         for k in range(cell.gaps.shape[1]):
@@ -131,6 +161,7 @@ def cell_records(cell) -> list[dict]:
                     bits_entropy=float(entropy[k]),
                     gap=float(cell.gaps[si, k]),
                     us_per_round=cell.us_per_round,
+                    seconds_per_round=spr,
                 )
             )
     return rows
@@ -161,6 +192,9 @@ def summary_records(cells, target: Optional[float] = None) -> list[dict]:
             bits_per_round_entropy=float(entropy[1] - entropy[0])
             if len(entropy) > 1 else 0.0,
             us_per_round=cell.us_per_round,
+            seconds_per_round=float("nan")
+            if getattr(cell, "seconds_per_round", None) is None
+            else float(cell.seconds_per_round),
         )
         if target is not None:
             row["bits_to_target"] = bits_to_accuracy(

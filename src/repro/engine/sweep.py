@@ -18,9 +18,11 @@ Execution paths:
   cell (currently the plain-FedNL cells; other cells fall back to vmap).
 
 Results come back as ``CellResult`` (stacked iterate/gap histories, the
-analytic AND measured cumulative-bits curves, per-cell ``us_per_round``)
-and tidy row dicts via ``SweepResult.records()`` — figure code becomes
-spec + plot, with ``bits``/``bits_measured`` side by side per row.
+analytic AND measured cumulative-bits curves, per-cell ``us_per_round``,
+and traffic-model ``seconds_per_round`` — measured wire bits priced on
+the sweep's ``link`` preset) and tidy row dicts via
+``SweepResult.records()`` — figure code becomes spec + plot, with
+``bits``/``bits_measured``/``seconds_per_round`` side by side per row.
 """
 
 from __future__ import annotations
@@ -114,6 +116,11 @@ class CellResult:
                           # (num_rounds+1,) cumulative bits/node with the
                           # sparsifier index streams entropy-coded
                           # (log2 C(d^2, k) accounting, no actual codec)
+    seconds_per_round: Optional[float] = None
+                          # simulated uplink seconds per synchronous round:
+                          # measured wire bits priced through the traffic
+                          # model (Sweep's ``link`` preset, straggler max
+                          # over the problem's n silos); None if link=None
 
 
 @dataclass
@@ -169,13 +176,19 @@ class Sweep:
     keys: "grad", "hess" (stacked per-silo oracles), optional "val" and
     "fstar" for gap curves, "n", "d", and optional "data"
     (``LogRegData``, required by the sharded path).
+
+    ``link`` prices each cell's measured wire bits through the traffic
+    model (``repro.wire.traffic`` preset name or ``LinkModel``) into the
+    ``seconds_per_round`` record column; ``link=None`` skips the model
+    (the column reads NaN).
     """
 
     def __init__(self, specs: Sequence[ExperimentSpec], mesh=None,
-                 axis: str = "data"):
+                 axis: str = "data", link="wan"):
         self.specs = list(specs)
         self.mesh = mesh
         self.axis = axis
+        self.link = link
 
     def run(self, problem, x0=None) -> SweepResult:
         oracles = Oracles(value=problem.get("val"), grad=problem["grad"],
@@ -211,6 +224,9 @@ class Sweep:
                 bits_entropy=rec.entropy_bits_curve(
                     method, d, spec.num_rounds),
                 us_per_round=wall_us / max(1, spec.num_rounds),
+                seconds_per_round=(
+                    rec.seconds_per_round(method, d, n, link=self.link)
+                    if self.link is not None else None),
             ))
         return SweepResult(cells)
 
@@ -239,6 +255,6 @@ class Sweep:
 
 
 def run_sweep(specs: Sequence[ExperimentSpec], problem, x0=None,
-              mesh=None, axis: str = "data") -> SweepResult:
-    """Convenience wrapper: ``Sweep(specs, mesh, axis).run(problem, x0)``."""
-    return Sweep(specs, mesh=mesh, axis=axis).run(problem, x0=x0)
+              mesh=None, axis: str = "data", link="wan") -> SweepResult:
+    """Convenience wrapper: ``Sweep(specs, mesh, axis, link).run(...)``."""
+    return Sweep(specs, mesh=mesh, axis=axis, link=link).run(problem, x0=x0)

@@ -2,8 +2,9 @@
 grid on a named problem from the command line, optionally sharded over
 the host mesh, and print tidy records (or a per-cell summary) as CSV —
 records carry the analytic ``bits``, the payload-measured
-``bits_measured``, and the entropy-index-coded ``bits_entropy``
-columns side by side.
+``bits_measured``, the entropy-index-coded ``bits_entropy``, and the
+traffic-model ``seconds_per_round`` (``--link`` preset) columns side
+by side.
 
     PYTHONPATH=src python -m repro.launch.sweep \
         --problem a1a --method fednl --compressor rankr --levels 1,2,4 \
@@ -49,6 +50,10 @@ def main(argv=None) -> int:
                     help="emit full (cell, seed, round) tidy records")
     ap.add_argument("--sharded", action="store_true",
                     help="run through the shard_map path over the host mesh")
+    ap.add_argument("--link", default="wan",
+                    help="traffic-model link preset for the "
+                         "seconds_per_round column (datacenter | wan | "
+                         "fl-cross-device | none)")
     args = ap.parse_args(argv)
 
     import jax
@@ -83,7 +88,8 @@ def main(argv=None) -> int:
 
     x0 = prob["xstar"] + 0.05 * jax.random.normal(
         jax.random.PRNGKey(1), (prob["d"],))
-    res = Sweep(specs, mesh=mesh).run(prob, x0=x0)
+    link = None if args.link in ("none", "") else args.link
+    res = Sweep(specs, mesh=mesh, link=link).run(prob, x0=x0)
 
     rows = (res.records() if args.records
             else res.summary(target=args.target))

@@ -1,0 +1,27 @@
+"""repro.wire — bytes on a wire, and what they cost.
+
+The host-side bitstream codec for every registered payload family
+(``codec``: Golomb–Rice delta-coded index streams, raw/fp16/int8 value
+streams, bit-exact fp32/fp64 round trips), the traffic model that turns
+encoded bytes into simulated seconds per round (``traffic``), and the
+unified ``WireReport`` cost surface (``report.wire_cost``) that
+supersedes the scattered bits accessors. See each submodule's docstring
+for the wire format and the model; ``ROADMAP.md`` item 2 is the design
+brief.
+"""
+
+from .bitio import BitReader, BitWriter, best_rice_param
+from .codec import (VALUE_FORMATS, WireFormatError, canonical, decode,
+                    encode, encode_silos, encoded_bytes)
+from .report import WireReport, silo_encoded_bytes, wire_cost
+from .traffic import (PRESETS, LinkModel, link_model, round_seconds,
+                      seconds_curve, transfer_seconds)
+
+__all__ = [
+    "BitReader", "BitWriter", "best_rice_param",
+    "VALUE_FORMATS", "WireFormatError", "canonical", "decode", "encode",
+    "encode_silos", "encoded_bytes",
+    "WireReport", "silo_encoded_bytes", "wire_cost",
+    "PRESETS", "LinkModel", "link_model", "round_seconds", "seconds_curve",
+    "transfer_seconds",
+]

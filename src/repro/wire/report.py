@@ -1,0 +1,106 @@
+"""``WireReport`` — the one wire-cost surface.
+
+Three PRs grew four overlapping ways to ask "how big is this
+compressor's uplink": ``comp.spec(shape).bits`` / ``comp.bits(shape)``
+(the paper's analytic claim), ``payload_bits(comp, shape)`` (measured
+payload structure, raw index streams), ``payload_bits(...,
+index_coding="entropy")`` (the entropy-coded index estimate), and — new
+with the codec — the *actual* encoded buffer. ``wire_cost(comp, shape)``
+collapses them into one call returning one dataclass:
+
+    rep = wire_cost(comp, (d, d))
+    rep.analytic_bits   # comp.spec(shape).bits — the paper's x-axis
+    rep.raw_bits        # measured payload structure, raw 32-bit indices
+    rep.entropy_bits    # same, index streams entropy-coded (estimate)
+    rep.encoded_bytes   # len(codec.encode(payload)) on a sample input
+
+The first three are shape-static (eval_shape — zero FLOPs); the last is
+the codec run on a deterministic sample (normal(0, 1) under
+``PRNGKey(0)``, or a caller-supplied matrix), because a real encoder's
+output length is data-dependent — that is the whole point of having
+one. The legacy callables remain as thin deprecated aliases so existing
+code keeps working; new code should go through ``wire_cost``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+
+from .codec import encode_silos, encoded_bytes
+from .traffic import LinkModel, round_seconds
+
+
+@dataclasses.dataclass(frozen=True)
+class WireReport:
+    """Every wire-cost number for one (compressor, shape) pair.
+
+    analytic_bits: the paper's analytic claim (``comp.spec(shape).bits``)
+    raw_bits:      measured payload structure, raw 32-bit index streams
+    entropy_bits:  measured payload structure, entropy-coded index
+                   estimate (``<= raw_bits`` by construction)
+    encoded_bytes: actual codec output length on the sample input
+    value_format:  the codec value-stream format behind encoded_bytes
+    """
+
+    analytic_bits: int
+    raw_bits: int
+    entropy_bits: int
+    encoded_bytes: int
+    value_format: str = "raw"
+
+    @property
+    def encoded_bits(self) -> int:
+        return 8 * self.encoded_bytes
+
+    def seconds(self, link: Union[str, LinkModel], n: int = 1,
+                seed: int = 0) -> float:
+        """Simulated seconds to uplink the ENCODED buffer for one round
+        of an n-silo cohort (``repro.wire.traffic.round_seconds``)."""
+        return round_seconds(float(self.encoded_bits), link, n=n, seed=seed)
+
+
+def wire_cost(comp, shape, *, dtype=None, value_format: str = "raw",
+              sample=None, key=None) -> WireReport:
+    """The single wire-cost entry point: one ``WireReport`` per
+    (compressor, shape).
+
+    ``dtype`` defaults to the ambient float (f64 under x64 — the
+    paper's accounting). ``sample`` supplies the matrix the codec
+    encodes (defaults to a deterministic standard normal); ``key`` the
+    PRNG key randomized compressors consume. Supersedes the deprecated
+    quartet ``comp.bits(shape)`` / ``comp.spec(shape).bits`` /
+    ``payload_bits(comp, shape)`` / ``payload.bits(index_coding=...)``
+    — all of which remain as aliases of the first three fields."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core.compressors import payload_bits
+
+    shape = tuple(int(s) for s in shape)
+    if dtype is None:
+        dtype = jnp.result_type(float)
+    if sample is None:
+        sample = jax.random.normal(jax.random.PRNGKey(0), shape,
+                                   dtype=jnp.dtype(dtype))
+    if key is None:
+        key = jax.random.PRNGKey(1)
+    payload = comp.compress(jnp.asarray(sample, dtype=jnp.dtype(dtype)), key)
+    return WireReport(
+        analytic_bits=int(comp.spec(shape).bits),
+        raw_bits=int(payload_bits(comp, shape, dtype=dtype)),
+        entropy_bits=int(payload_bits(comp, shape, dtype=dtype,
+                                      index_coding="entropy")),
+        encoded_bytes=encoded_bytes(payload, value_format=value_format),
+        value_format=value_format,
+    )
+
+
+def silo_encoded_bytes(payloads, value_format: str = "raw") -> np.ndarray:
+    """Per-silo encoded sizes (bytes) of a STACKED payload — the array
+    the traffic model prices for a heterogeneous cohort."""
+    return np.array([len(b) for b in
+                     encode_silos(payloads, value_format=value_format)],
+                    dtype=np.int64)
