@@ -50,12 +50,23 @@ import numpy as np
 
 from benchmarks.common import bits_to_accuracy, gaps, problem, write_csv
 from repro.core import FedNL, RandK, RandomDithering, RankR, TopK
-from repro.core.baselines import (Adiana, Artemis, Diana, Dingo, Dore, NL1,
-                                  gd_ls_run, gd_run)
+from repro.core.baselines import (
+    NL1,
+    Adiana,
+    Artemis,
+    Diana,
+    Dingo,
+    Dore,
+    gd_ls_run,
+    gd_run,
+)
 from repro.core.compressors import FLOAT_BITS
-from repro.engine import ExperimentSpec, Sweep
-from repro.engine import bits_to_accuracy as bits_at
-from repro.engine import rounds_to_accuracy as rounds_at
+from repro.engine import (
+    ExperimentSpec,
+    Sweep,
+    bits_to_accuracy as bits_at,
+    rounds_to_accuracy as rounds_at,
+)
 
 RESULTS = []
 TARGET = 1e-12

@@ -1,0 +1,51 @@
+"""``repro.analysis`` — static enforcement of the data-path invariants.
+
+The repo's core claims — the uplink is dense-free end to end, kernels
+fit the VMEM dispatch budget, ``-1`` payload padding never aliases a
+real index, f64 numerics are never silently downcast, jitted hot paths
+never sync with the host — used to live in one-off hand-written tests
+(or nowhere). This package turns each claim into a ``Rule`` over traced
+programs: every registered ``Method`` step, ``Compressor.aggregate``
+path, and Pallas kernel op is traced via ``jax.make_jaxpr`` /
+``jax.eval_shape`` (trace-only — runs on CPU CI, no TPU needed) and the
+closed jaxpr is walked by a registry of rules mirroring the engine's
+method/compressor registries.
+
+Entry points:
+
+  check(fn, *args, rules=..., context=...)   one-line pytest assertion
+  analyze(...)                               full registry sweep
+  python -m repro.launch.analyze             CLI (text/JSON, CI lane)
+
+Rules self-register in ``rules.py`` / ``source_rules.py`` (imported
+here so the registry is populated on package import).
+"""
+
+from . import rules as _rules, source_rules as _source_rules  # noqa: F401
+from .framework import (
+    AnalysisError,
+    Rule,
+    Target,
+    Violation,
+    available_rules,
+    check,
+    get_rule,
+    register_rule,
+)
+from .reporters import render_json, render_text
+from .targets import analyze, iter_targets
+
+__all__ = [
+    "AnalysisError",
+    "Rule",
+    "Target",
+    "Violation",
+    "analyze",
+    "available_rules",
+    "check",
+    "get_rule",
+    "iter_targets",
+    "register_rule",
+    "render_json",
+    "render_text",
+]

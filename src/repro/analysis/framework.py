@@ -1,0 +1,151 @@
+"""Rule protocol, rule registry, and the ``check`` entry point.
+
+A ``Rule`` inspects one traced program (a closed jaxpr) in the context
+of one ``Target`` and returns ``Violation``s. Rules self-register in a
+string-keyed registry (mirroring the engine's Method/Compressor
+registries) so CLIs and tests can select them declaratively
+(``--rule vmem-budget``, ``check(fn, x, rules=["no-host-sync"])``).
+
+Source-level rules (kind="source") receive a file path + AST instead of
+a jaxpr — same registry, same reporting surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One rule violation at one site of one target."""
+
+    rule: str
+    target: str
+    message: str
+    site: Optional[str] = None  # eqn summary / file:line
+
+    def __str__(self) -> str:
+        loc = f" [{self.site}]" if self.site else ""
+        return f"{self.target}: {self.rule}: {self.message}{loc}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """One analyzable program.
+
+    name:    stable identifier ("method:fednl[topk]", "kernel:...")
+    kind:    "method-step" | "aggregate" | "precond" | "kernel" | "source"
+    trace:   zero-arg callable returning the ClosedJaxpr (lazy — targets
+             are enumerable without paying tracing cost; "source" targets
+             return the file path instead)
+    rules:   rule names that apply to this target
+    context: rule parameters (silo axis n, dense_shape, block, budget,
+             ... — whatever the target's rules consume)
+    """
+
+    name: str
+    kind: str
+    trace: Callable[[], Any]
+    rules: tuple
+    context: dict = dataclasses.field(default_factory=dict)
+
+
+class Rule:
+    """Base class: subclass, set ``name``/``description``, implement
+    ``check(traced, target) -> list[Violation]`` where ``traced`` is the
+    target's ``trace()`` output (a ClosedJaxpr for jaxpr rules, a file
+    path for source rules). Register with ``@register_rule``."""
+
+    name: str = ""
+    description: str = ""
+    kinds: tuple = ()  # target kinds this rule understands ((): any)
+
+    def check(self, traced, target: Target) -> list:
+        raise NotImplementedError
+
+    def violation(self, target: Target, message: str,
+                  site: Optional[str] = None) -> Violation:
+        return Violation(rule=self.name, target=target.name,
+                         message=message, site=site)
+
+
+_RULES: dict[str, Rule] = {}
+
+
+def register_rule(cls):
+    """Class decorator: instantiate and register under ``cls.name``.
+    Re-registration overwrites (last wins) so notebooks can hot-patch."""
+    inst = cls()
+    assert inst.name, cls
+    _RULES[inst.name] = inst
+    return cls
+
+
+def available_rules() -> list:
+    return sorted(_RULES)
+
+
+def get_rule(name: str) -> Rule:
+    try:
+        return _RULES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown rule {name!r}; available: {available_rules()}"
+        ) from None
+
+
+def rule_descriptions() -> dict:
+    return {name: _RULES[name].description for name in available_rules()}
+
+
+class AnalysisError(AssertionError):
+    """Raised by ``check`` when a traced program violates a rule."""
+
+    def __init__(self, violations: Sequence[Violation]):
+        self.violations = list(violations)
+        lines = "\n".join(f"  - {v}" for v in self.violations)
+        super().__init__(
+            f"{len(self.violations)} static-analysis violation(s):\n{lines}")
+
+
+def run_rules(target: Target) -> list:
+    """Trace ``target`` once and run all its rules."""
+    traced = target.trace()
+    out = []
+    for rname in target.rules:
+        rule = get_rule(rname)
+        if rule.kinds and target.kind not in rule.kinds:
+            continue
+        out.extend(rule.check(traced, target))
+    return out
+
+
+def check(fn, *args, rules, name: Optional[str] = None, kind: str = "check",
+          context: Optional[dict] = None, raise_on_violation: bool = True,
+          **trace_kwargs) -> list:
+    """One-line pytest integration: trace ``fn(*args)`` and assert the
+    given rules hold.
+
+        analysis.check(lambda g, s: opt.update(g, s, params), grads,
+                       state, rules=["no-dense-roundtrip"],
+                       context={"block": 128})
+
+    ``args`` may be concrete arrays or ``jax.ShapeDtypeStruct``s (the
+    trace never executes the function). Returns the violations (empty on
+    success); raises ``AnalysisError`` unless ``raise_on_violation`` is
+    False.
+    """
+    target = Target(
+        name=name or getattr(fn, "__name__", "check"),
+        kind=kind,
+        trace=lambda: jax.make_jaxpr(fn, **trace_kwargs)(*args),
+        rules=tuple(rules),
+        context=dict(context or {}),
+    )
+    violations = run_rules(target)
+    if violations and raise_on_violation:
+        raise AnalysisError(violations)
+    return violations

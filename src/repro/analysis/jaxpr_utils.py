@@ -1,0 +1,98 @@
+"""Shared jaxpr-walking machinery for the analysis rules.
+
+All rules operate on *closed* jaxprs produced by ``jax.make_jaxpr``.
+Sub-programs (scan/while bodies, pjit calls, custom_jvp rules, Pallas
+kernel bodies) live inside equation params; ``walk_eqns`` flattens the
+whole nest into one stream of ``(eqn, in_pallas)`` pairs so a rule can
+either skip kernel bodies (in-kernel tiles are VMEM-resident by
+construction — most data-path rules do) or descend into them.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+
+PALLAS_PRIMITIVE = "pallas_call"
+
+
+def _as_jaxpr(obj):
+    """Unwrap ClosedJaxpr -> Jaxpr; pass Jaxpr through; else None."""
+    inner = getattr(obj, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    if hasattr(obj, "eqns"):
+        return obj
+    return None
+
+
+def subjaxprs(eqn) -> Iterator:
+    """Every sub-jaxpr stored in an equation's params (scan/pjit/cond
+    bodies, custom-derivative rules, Pallas kernel bodies, ...)."""
+    for param in eqn.params.values():
+        for leaf in jax.tree.leaves(
+                param, is_leaf=lambda x: _as_jaxpr(x) is not None):
+            sub = _as_jaxpr(leaf)
+            if sub is not None:
+                yield sub
+
+
+def walk_eqns(jaxpr, in_pallas: bool = False) -> Iterator[tuple]:
+    """Yield ``(eqn, in_pallas)`` for every equation in ``jaxpr`` and all
+    nested sub-jaxprs; ``in_pallas`` is True inside a pallas_call body."""
+    jaxpr = _as_jaxpr(jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn, in_pallas
+        is_pallas = eqn.primitive.name == PALLAS_PRIMITIVE
+        for sub in subjaxprs(eqn):
+            yield from walk_eqns(sub, in_pallas or is_pallas)
+
+
+def walk_jaxprs(jaxpr, in_pallas: bool = False) -> Iterator[tuple]:
+    """Yield ``(jaxpr, in_pallas)`` for the program and every nested
+    sub-jaxpr — for rules that need per-scope dataflow (producer maps)."""
+    jaxpr = _as_jaxpr(jaxpr)
+    yield jaxpr, in_pallas
+    for eqn in jaxpr.eqns:
+        is_pallas = eqn.primitive.name == PALLAS_PRIMITIVE
+        for sub in subjaxprs(eqn):
+            yield from walk_jaxprs(sub, in_pallas or is_pallas)
+
+
+def shape_of(var) -> tuple:
+    """Static shape of a jaxpr atom (``()`` for literals/abstract)."""
+    aval = getattr(var, "aval", None)
+    shape = getattr(aval, "shape", ())
+    try:
+        return tuple(int(s) for s in shape)
+    except TypeError:  # dynamic/polymorphic dims: not comparable
+        return ()
+
+
+def dtype_of(var):
+    aval = getattr(var, "aval", None)
+    return getattr(aval, "dtype", None)
+
+
+def producer_map(jaxpr) -> dict:
+    """Map each output Var of ``jaxpr``'s equations to its defining eqn
+    (one scope only — sub-jaxprs get their own map)."""
+    jaxpr = _as_jaxpr(jaxpr)
+    out = {}
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            out[v] = eqn
+    return out
+
+
+def is_literal(var) -> bool:
+    return not hasattr(var, "count")  # Literal atoms have .val, no .count
+
+
+def describe_eqn(eqn) -> str:
+    """Short human-readable equation summary for violation messages."""
+    outs = ", ".join(
+        f"{getattr(dtype_of(v), 'name', '?')}{list(shape_of(v))}"
+        for v in eqn.outvars)
+    return f"{eqn.primitive.name} -> {outs}"

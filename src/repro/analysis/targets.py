@@ -1,0 +1,269 @@
+"""Target enumeration: turn the engine's registries into the analyzable
+surface.
+
+Four jaxpr-traced families plus one source-level family:
+
+  method:<name>[<comp>]   one ``step`` of every registered method, for
+                          every registered compressor family (Newton
+                          references once, with their dense wire)
+  aggregate:<comp>        ``Compressor.aggregate`` over a stacked
+                          payload struct (``jax.eval_shape`` of the
+                          vmapped compress — zero FLOPs)
+  kernel:<pkg>:<op>       every Pallas kernel package's
+                          ``analysis_targets()`` configs (bodies
+                          forced, trace-only)
+  precond:update[...]     the fednl_precond training step on its pinned
+                          TPU path (single-tensor and cross-silo)
+  source:<path>           every module under ``src/repro`` (AST rules)
+
+Everything is lazy: enumerating targets costs nothing; ``analyze``
+traces each exactly once and runs its rules.
+"""
+
+from __future__ import annotations
+
+import pathlib
+from typing import Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .framework import Target, Violation, get_rule
+
+_N_SILOS = 3
+_DIM = 16
+
+# Per-method constructor params (harvested from the engine tests): the
+# smallest config each factory accepts.
+_METHOD_PARAMS = {
+    "fednl-pp": {"tau": 2},
+    "fednl-cr": {"l_star": 1.0},
+    "fednl-bc": {"model_compressor": ("topk", 5), "p": 0.9, "option": 1,
+                 "mu": 1e-3},
+    "fednl-ppbc": {"model_compressor": ("topk", 5), "tau": 2},
+}
+
+# Representative level per compressor family (the factory knob).
+_COMPRESSOR_LEVELS = {
+    "topk": 5, "topksym": 5, "randk": 5, "rankr": 1, "powersgd": 1,
+    "blocktopk": 4, "blocktopkthreshold": 4, "dithering": 4,
+    "natural": 0.5, "identity": None, "zero": None,
+}
+
+_KERNEL_PACKAGES = ("block_topk", "scatter_accum", "hess_update",
+                    "tiled_matmul", "flash_attention")
+
+_JAXPR_RULES = ("no-host-sync", "padding-sentinel")
+
+# Modules that DEFINE the deprecated wire-cost accessors (and their
+# WireReport implementation) — excluded from the source sweep.
+_SOURCE_ALLOWLIST = ("core/compressors.py", "wire/report.py")
+
+
+def _float():
+    return jnp.result_type(float)
+
+
+def _oracles(n: int, d: int):
+    """Synthetic quadratic oracles in the paper's federated form: silo i
+    holds f_i(x) = c_i/2 ||x||^2, so grads stack to (n, d) and Hessians
+    to (n, d, d) — enough structure for every method to trace."""
+    from ..engine.method import Oracles
+
+    coef = jnp.arange(1, n + 1, dtype=_float()) / n
+
+    def value(x):
+        return 0.5 * jnp.mean(coef) * jnp.sum(x * x)
+
+    def grad(x):
+        return coef[:, None] * x[None, :]
+
+    def hess(x):
+        eye = jnp.eye(d, dtype=x.dtype)
+        return coef[:, None, None] * eye[None]
+
+    return Oracles(value, grad, hess)
+
+
+def _compressor_families():
+    """(name, factory) per unique registered family — spelling aliases
+    share a factory object and are reported once, under the first
+    alphabetical name."""
+    from ..core.compressors import registered_compressors
+
+    reg = registered_compressors()
+    seen = {}
+    for name in sorted(reg, key=lambda n: (n not in _COMPRESSOR_LEVELS, n)):
+        fac = reg[name]
+        if id(fac) not in seen:
+            seen[id(fac)] = name
+    return [(name, reg[name]) for name in sorted(seen.values())]
+
+
+def _make_comp(name):
+    from ..core.compressors import make_compressor
+
+    return make_compressor(name, _COMPRESSOR_LEVELS.get(name, 5))
+
+
+def _method_targets() -> Iterator[Target]:
+    from ..engine.method import make_method, registered_methods
+
+    n, d = _N_SILOS, _DIM
+    orc = _oracles(n, d)
+    x0 = jax.ShapeDtypeStruct((d,), _float())
+
+    def one(mname, cname, comp):
+        params = dict(_METHOD_PARAMS.get(mname, {}))
+        if mname == "ns":
+            params["h_fixed"] = jnp.eye(d, dtype=_float())
+        method = make_method(mname, orc, comp, **params)
+
+        def trace():
+            state = jax.eval_shape(lambda x: method.init(x, n), x0)
+            return jax.make_jaxpr(method.step)(state)
+
+        rules = _JAXPR_RULES + ("dtype-discipline",)
+        if comp is not None and not comp.wire_is_dense:
+            rules = rules + ("no-dense-silo-stack",)
+        label = f"method:{mname}[{cname}]" if comp is not None \
+            else f"method:{mname}"
+        return Target(name=label, kind="method-step", trace=trace,
+                      rules=rules,
+                      context={"silo_axis": n, "dense_shape": (d, d)})
+
+    families = _compressor_families()
+    for mname in sorted(registered_methods()):
+        if mname in ("newton", "n0", "n0-ls", "ns"):
+            # Newton references: no compressor, dense wire by definition
+            yield one(mname, "", None)
+        else:
+            for cname, _fac in families:
+                yield one(mname, cname, _make_comp(cname))
+
+
+def _aggregate_targets() -> Iterator[Target]:
+    n, shape = _N_SILOS, (_DIM, _DIM)
+    for cname, _fac in _compressor_families():
+        comp = _make_comp(cname)
+
+        def trace(comp=comp):
+            m = jax.ShapeDtypeStruct((n,) + shape, _float())
+            keys = jax.ShapeDtypeStruct((n, 2), jnp.uint32)
+            pay = jax.eval_shape(jax.vmap(comp.compress), m, keys)
+            return jax.make_jaxpr(lambda p: comp.aggregate(p, shape))(pay)
+
+        rules = _JAXPR_RULES
+        if not comp.wire_is_dense:
+            rules = rules + ("no-dense-silo-stack",)
+        yield Target(name=f"aggregate:{cname}", kind="aggregate",
+                     trace=trace, rules=rules,
+                     context={"silo_axis": n, "dense_shape": shape})
+
+
+def _kernel_targets() -> Iterator[Target]:
+    import importlib
+
+    for pkg in _KERNEL_PACKAGES:
+        mod = importlib.import_module(f"repro.kernels.{pkg}")
+        for spec in mod.analysis_targets():
+            rules = _JAXPR_RULES + ("vmem-budget",)
+            if "block" in spec.get("context", {}):
+                rules = rules + ("no-dense-roundtrip",)
+            yield Target(name=f"kernel:{pkg}:{spec['name']}",
+                         kind="kernel", trace=spec["trace"], rules=rules,
+                         context=dict(spec.get("context", {})))
+
+
+def _precond_targets() -> Iterator[Target]:
+    """The fednl_precond step on its pinned TPU path — deliberately
+    mixed-precision (f32 curvature state by design), so the dtype rule
+    does not apply; the dense-free payload path and VMEM budget do."""
+    from ..second_order.fednl_precond import FedNLPrecondOptimizer
+
+    d, block = 256, 128
+    opt = FedNLPrecondOptimizer(lr=0.1, k_per_block=32, block=block,
+                                use_pallas=True)
+    params = {"w": jax.ShapeDtypeStruct((d, d), jnp.float32)}
+    grads = {"w": jax.ShapeDtypeStruct((d, d), jnp.float32)}
+    rules = _JAXPR_RULES + ("no-dense-roundtrip", "vmem-budget",
+                            "no-dense-silo-stack")
+    ctx = {"block": block, "silo_axis": _N_SILOS,
+           "dense_shape": (d, d)}
+
+    def trace_single():
+        state = jax.eval_shape(opt.init, params)
+        return jax.make_jaxpr(
+            lambda g, s, p: opt.update(g, s, p))(grads, state, params)
+
+    def trace_silo():
+        state = jax.eval_shape(opt.init, params)
+        obs = {"w": jax.ShapeDtypeStruct((_N_SILOS, d, d), jnp.float32)}
+        return jax.make_jaxpr(
+            lambda g, s, p, o: opt.update(g, s, p, observations=o))(
+                grads, state, params, obs)
+
+    yield Target(name="precond:update[single]", kind="precond",
+                 trace=trace_single, rules=rules, context=dict(ctx))
+    yield Target(name="precond:update[silo]", kind="precond",
+                 trace=trace_silo, rules=rules, context=dict(ctx))
+
+
+def _source_targets() -> Iterator[Target]:
+    root = pathlib.Path(__file__).resolve().parents[1]  # src/repro
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if rel in _SOURCE_ALLOWLIST or rel.startswith("analysis/"):
+            continue
+        yield Target(name=f"source:repro/{rel}", kind="source",
+                     trace=lambda p=path: p,
+                     rules=("no-deprecated-accessor",), context={})
+
+
+_KIND_BUILDERS = {
+    "method-step": _method_targets,
+    "aggregate": _aggregate_targets,
+    "kernel": _kernel_targets,
+    "precond": _precond_targets,
+    "source": _source_targets,
+}
+
+
+def iter_targets(kinds: Optional[Sequence[str]] = None) -> list:
+    """Enumerate all analyzable targets (lazy traces — free to list)."""
+    out = []
+    for kind, builder in _KIND_BUILDERS.items():
+        if kinds is not None and kind not in kinds:
+            continue
+        out.extend(builder())
+    return out
+
+
+def analyze(rules: Optional[Sequence[str]] = None,
+            targets: Optional[Sequence[str]] = None,
+            kinds: Optional[Sequence[str]] = None) -> list:
+    """Run the sweep: returns ``[(target, [violations]), ...]`` over
+    every enumerated target (filtered by rule name / target-name
+    substring / kind). A target whose trace itself fails contributes an
+    ``analysis-error`` violation — a broken registry entry must fail
+    the lane loudly, not vanish from it."""
+    results = []
+    for t in iter_targets(kinds):
+        if targets is not None and not any(s in t.name for s in targets):
+            continue
+        active = [r for r in t.rules if rules is None or r in rules]
+        if not active:
+            continue
+        try:
+            traced = t.trace()
+            found = []
+            for rname in active:
+                rule = get_rule(rname)
+                if rule.kinds and t.kind not in rule.kinds:
+                    continue
+                found.extend(rule.check(traced, t))
+        except Exception as e:  # noqa: BLE001 — reported, not swallowed
+            found = [Violation(rule="analysis-error", target=t.name,
+                               message=f"{type(e).__name__}: {e}")]
+        results.append((t, found))
+    return results

@@ -4,8 +4,8 @@ from .compressors import (
     BlockSparsePayload,
     BlockTopK,
     BlockTopKThreshold,
-    CompSpec,
     Compressor,
+    CompSpec,
     DensePayload,
     DitheredPayload,
     Identity,

@@ -25,12 +25,12 @@ FedNL and report analytic bits per round.
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from .compressors import Compressor, FLOAT_BITS, INDEX_BITS
+from .compressors import FLOAT_BITS, INDEX_BITS, Compressor
 from .newton import backtracking
 
 
@@ -107,7 +107,9 @@ class Diana:
         )
 
     def bits_per_round(self, d: int) -> int:
-        return self.comp.bits((d,))
+        from ..wire.report import wire_cost
+
+        return wire_cost(self.comp, (d,), encoded=False).analytic_bits
 
     def run(self, x0, n, num_rounds, seed: int = 0):
         state = self.init(x0, n, seed=seed)
@@ -195,7 +197,10 @@ class Adiana:
         return AdianaState(x, y_new, z_new, w_new, h_new, key)
 
     def bits_per_round(self, d: int) -> int:
-        return 2 * self.comp.bits((d,))  # two compressed vectors per round
+        from ..wire.report import wire_cost
+
+        # two compressed vectors per round
+        return 2 * wire_cost(self.comp, (d,), encoded=False).analytic_bits
 
     def run(self, x0, n, num_rounds, seed: int = 0):
         state = self.init(x0, n, seed=seed)
@@ -432,7 +437,10 @@ class Dore:
         return DoreState(x_hat_new, x_new, h_new, key)
 
     def bits_per_round(self, d: int) -> tuple[int, int]:
-        return self.comp_up.bits((d,)), self.comp_down.bits((d,))
+        from ..wire.report import wire_cost
+
+        return (wire_cost(self.comp_up, (d,), encoded=False).analytic_bits,
+                wire_cost(self.comp_down, (d,), encoded=False).analytic_bits)
 
     def run(self, x0, n, num_rounds, seed: int = 0):
         state = self.init(x0, n, seed=seed)
@@ -491,7 +499,10 @@ class Artemis:
         return ArtemisState(state.x - self.gamma * g_hat, h_new, key)
 
     def bits_per_round(self, d: int) -> int:
-        return self.comp.bits((d,))  # per active device
+        from ..wire.report import wire_cost
+
+        # per active device
+        return wire_cost(self.comp, (d,), encoded=False).analytic_bits
 
     def run(self, x0, n, num_rounds, seed: int = 0):
         state = self.init(x0, n, seed=seed)

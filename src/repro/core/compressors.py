@@ -393,7 +393,14 @@ class Compressor:
     """A compression operator as a wire codec with analytic accounting.
 
     Subclasses implement ``compress``/``decompress``/``spec``; the dense
-    ``__call__`` is always ``decompress(compress(...))``."""
+    ``__call__`` is always ``decompress(compress(...))``.
+
+    ``wire_is_dense`` marks families whose payload carries one slot per
+    matrix entry (identity, natural, dithering): their stacked payloads
+    ARE (n, d, d)-sized by design, so the no-dense-silo-stack analysis
+    rule does not apply to them."""
+
+    wire_is_dense = False  # plain class attr, NOT a dataclass field
 
     def compress(self, m: jax.Array, key: Optional[jax.Array] = None):
         raise NotImplementedError
@@ -494,6 +501,14 @@ def register_compressor(*names: str):
 
 def available_compressors() -> list[str]:
     return sorted(_REGISTRY)
+
+
+def registered_compressors() -> dict[str, Callable[..., Compressor]]:
+    """Snapshot of the compressor registry (canonical name -> factory) —
+    the introspection hook the static-analysis sweep (``repro.analysis``)
+    enumerates. Spelling aliases share a factory object, so callers can
+    deduplicate families by factory identity."""
+    return dict(_REGISTRY)
 
 
 def make_compressor(family: str, level=None) -> Compressor:
@@ -811,6 +826,8 @@ class PowerSGD(Compressor):
 class Identity(Compressor):
     """C = I (classical Newton's communication)."""
 
+    wire_is_dense = True
+
     def compress(self, m: jax.Array, key=None) -> DensePayload:
         return DensePayload(values=m, count=numel(m.shape), indexed=False)
 
@@ -895,6 +912,7 @@ class RandomDithering(Compressor):
 
     s: int
     q: float = 2.0
+    wire_is_dense = True
 
     def compress(self, x: jax.Array, key: jax.Array = None) -> DitheredPayload:
         assert key is not None
@@ -941,6 +959,7 @@ class NaturalSparsification(Compressor):
     (see DensePayload)."""
 
     p: float
+    wire_is_dense = True
 
     def compress(self, x: jax.Array, key: jax.Array = None) -> DensePayload:
         assert key is not None

@@ -25,13 +25,13 @@ paper's; the tests validate empirical convergence.
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from ..engine.method import MethodBase, Oracles, register
-from .compressors import Compressor, FLOAT_BITS
+from .compressors import FLOAT_BITS, Compressor
 from .fednl import FedNLState
 from .linalg import frob_norm, solve_newton_system
 
@@ -89,7 +89,10 @@ class StochasticFedNL(MethodBase):
     def bits_per_round(self, d: int) -> int:
         """Uplink per device: gradient + S_i + l_i (as FedNL Option 2).
         Measured counterpart comes from MethodBase (same layout)."""
-        return d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
+        from ..wire.report import wire_cost
+
+        s_bits = wire_cost(self.comp, (d, d), encoded=False).analytic_bits
+        return d * FLOAT_BITS + s_bits + FLOAT_BITS
 
 
 class FedNLPPBCState(NamedTuple):
@@ -195,19 +198,24 @@ class FedNLPPBC(MethodBase):
 
     def bits_per_round(self, d: int) -> tuple[int, int]:
         """(uplink per active silo, downlink broadcast). Analytic."""
-        up = self.comp.bits((d, d)) + FLOAT_BITS + d * FLOAT_BITS
-        down = self.comp_m.bits((d,))
+        from ..wire.report import wire_cost
+
+        s_bits = wire_cost(self.comp, (d, d), encoded=False).analytic_bits
+        up = s_bits + FLOAT_BITS + d * FLOAT_BITS
+        down = wire_cost(self.comp_m, (d,), encoded=False).analytic_bits
         return up, down
 
     def measured_bits_per_round(self, d: int,
                                 index_coding: str = "raw") -> tuple[int, int]:
         """Overrides the MethodBase default: bidirectional wire."""
-        from .compressors import canonical_float_bits, payload_bits
+        from ..wire.report import wire_cost
+        from .compressors import canonical_float_bits
 
         fb = canonical_float_bits()
-        up = (payload_bits(self.comp, (d, d), index_coding=index_coding)
-              + fb + d * fb)
-        down = payload_bits(self.comp_m, (d,), index_coding=index_coding)
+        pick = lambda rep: (rep.entropy_bits if index_coding == "entropy"
+                            else rep.raw_bits)
+        up = pick(wire_cost(self.comp, (d, d), encoded=False)) + fb + d * fb
+        down = pick(wire_cost(self.comp_m, (d,), encoded=False))
         return up, down
 
 

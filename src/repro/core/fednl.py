@@ -141,9 +141,11 @@ class FedNL(MethodBase):
     def bits_per_round(self, d: int) -> int:
         """ANALYTIC uplink bits per device per round: gradient + S_i + l_i
         (the paper's x-axis, FLOAT_BITS-denominated)."""
+        from ..wire.report import wire_cost
         from .compressors import FLOAT_BITS
 
-        return d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
+        s_bits = wire_cost(self.comp, (d, d), encoded=False).analytic_bits
+        return d * FLOAT_BITS + s_bits + FLOAT_BITS
 
     # measured_bits_per_round comes from MethodBase: payload structure
     # (jax.eval_shape) + (d + 1) ambient floats — the same layout.

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..engine.method import MethodBase, Oracles, register
-from .compressors import Compressor, FLOAT_BITS
+from .compressors import FLOAT_BITS, Compressor
 from .linalg import frob_norm, project_psd, solve_newton_system
 
 
@@ -119,8 +119,12 @@ class FedNLBC(MethodBase):
 
     def bits_per_round(self, d: int) -> tuple[float, int]:
         """(expected uplink bits per device, downlink bits). Analytic."""
-        up = self.p * d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
-        down = self.comp_m.bits((d,)) + 1  # model increment + xi bit
+        from ..wire.report import wire_cost
+
+        s_bits = wire_cost(self.comp, (d, d), encoded=False).analytic_bits
+        m_bits = wire_cost(self.comp_m, (d,), encoded=False).analytic_bits
+        up = self.p * d * FLOAT_BITS + s_bits + FLOAT_BITS
+        down = m_bits + 1  # model increment + xi bit
         return up, down
 
     def measured_bits_per_round(self, d: int,
@@ -128,13 +132,16 @@ class FedNLBC(MethodBase):
         """Measured counterpart (overrides the MethodBase default: this
         wire is bidirectional): uplink/downlink payload structure sizes
         via jax.eval_shape over both compressors' payloads."""
-        from .compressors import canonical_float_bits, payload_bits
+        from ..wire.report import wire_cost
+        from .compressors import canonical_float_bits
 
         fb = canonical_float_bits()
+        pick = lambda rep: (rep.entropy_bits if index_coding == "entropy"
+                            else rep.raw_bits)
         up = (self.p * d * fb
-              + payload_bits(self.comp, (d, d), index_coding=index_coding)
+              + pick(wire_cost(self.comp, (d, d), encoded=False))
               + fb)
-        down = payload_bits(self.comp_m, (d,), index_coding=index_coding) + 1
+        down = pick(wire_cost(self.comp_m, (d,), encoded=False)) + 1
         return up, down
 
 

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ..engine.method import MethodBase, Oracles, register
-from .compressors import Compressor, FLOAT_BITS
+from .compressors import FLOAT_BITS, Compressor
 from .fednl import FedNLState
 from .linalg import frob_norm, solve_cubic_subproblem
 
@@ -76,7 +76,10 @@ class FedNLCR(MethodBase):
         )
 
     def bits_per_round(self, d: int) -> int:
-        return d * FLOAT_BITS + self.comp.bits((d, d)) + FLOAT_BITS
+        from ..wire.report import wire_cost
+
+        s_bits = wire_cost(self.comp, (d, d), encoded=False).analytic_bits
+        return d * FLOAT_BITS + s_bits + FLOAT_BITS
 
 
 @register("fednl-cr")

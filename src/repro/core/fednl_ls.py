@@ -10,15 +10,15 @@ negligible; we charge FLOAT_BITS per probe per device in accounting.
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from ..engine.method import MethodBase, Oracles, register
-from .compressors import Compressor, FLOAT_BITS
+from .compressors import FLOAT_BITS, Compressor
 from .fednl import FedNLState
-from .linalg import frob_norm, project_psd, solve_newton_system
+from .linalg import project_psd, solve_newton_system
 from .newton import backtracking
 
 
@@ -80,7 +80,10 @@ class FedNLLS(MethodBase):
 
     def bits_per_round(self, d: int) -> int:
         # f_i + gradient + S_i
-        return FLOAT_BITS + d * FLOAT_BITS + self.comp.bits((d, d))
+        from ..wire.report import wire_cost
+
+        s_bits = wire_cost(self.comp, (d, d), encoded=False).analytic_bits
+        return FLOAT_BITS + d * FLOAT_BITS + s_bits
 
     def init_bits(self, d: int) -> int:
         """H_i^0 = hess_i(x0) shipped once (as in FedNL)."""

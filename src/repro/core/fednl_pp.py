@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..engine.method import MethodBase, Oracles, register
-from .compressors import Compressor, FLOAT_BITS
+from .compressors import FLOAT_BITS, Compressor
 from .linalg import frob_norm, solve_newton_system
 
 
@@ -124,7 +124,10 @@ class FedNLPP(MethodBase):
     def bits_per_round(self, d: int) -> int:
         """Per *active* device: S_i + (l diff) + (g diff). Analytic; the
         measured counterpart comes from MethodBase (same layout)."""
-        return self.comp.bits((d, d)) + FLOAT_BITS + d * FLOAT_BITS
+        from ..wire.report import wire_cost
+
+        s_bits = wire_cost(self.comp, (d, d), encoded=False).analytic_bits
+        return s_bits + FLOAT_BITS + d * FLOAT_BITS
 
 
 @register("fednl-pp")

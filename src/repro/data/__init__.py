@@ -1,3 +1,3 @@
-from .synthetic import make_synthetic, make_iid, make_libsvm_like
 from .libsvm import parse_libsvm, partition_across_silos
+from .synthetic import make_iid, make_libsvm_like, make_synthetic
 from .tokens import TokenPipeline

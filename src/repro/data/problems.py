@@ -11,8 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.newton import newton_run
-from ..core.objectives import (batch_grad, batch_hess, global_value,
-                               lipschitz_constants)
+from ..core.objectives import batch_grad, batch_hess, global_value, lipschitz_constants
 from .synthetic import make_libsvm_like, make_synthetic
 
 

@@ -13,7 +13,6 @@ embeddings (audio frames / vision patches) via ``extra_inputs``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

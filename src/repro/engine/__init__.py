@@ -6,16 +6,41 @@ key), one driver (vmap-over-seeds + scan-over-rounds), one sweep runner
 ``method.py`` for the protocol contract and ``sweep.py`` for execution.
 """
 
-from ..core.compressors import (available_compressors, make_compressor,
-                                payload_bits, register_compressor,
-                                scale_payload)
+from ..core.compressors import (
+    available_compressors,
+    make_compressor,
+    payload_bits,
+    register_compressor,
+    scale_payload,
+)
 from ..wire import LinkModel, WireReport, link_model, round_seconds, wire_cost
-from .method import (MethodBase, Oracles, available_methods, make_method,
-                     register, scan_rounds)
-from .records import (bits_curve, bits_to_accuracy, entropy_bits_curve,
-                      init_bits, measured_bits_curve,
-                      measured_bits_per_round, rounds_to_accuracy,
-                      seconds_curve, seconds_per_round, summary_records,
-                      uplink_bits_per_round)
-from .sweep import (CellResult, ExperimentSpec, Sweep, SweepResult,
-                    build_compressor, run_cell, run_sweep)
+from .method import (
+    MethodBase,
+    Oracles,
+    available_methods,
+    make_method,
+    register,
+    scan_rounds,
+)
+from .records import (
+    bits_curve,
+    bits_to_accuracy,
+    entropy_bits_curve,
+    init_bits,
+    measured_bits_curve,
+    measured_bits_per_round,
+    rounds_to_accuracy,
+    seconds_curve,
+    seconds_per_round,
+    summary_records,
+    uplink_bits_per_round,
+)
+from .sweep import (
+    CellResult,
+    ExperimentSpec,
+    Sweep,
+    SweepResult,
+    build_compressor,
+    run_cell,
+    run_sweep,
+)

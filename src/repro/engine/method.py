@@ -134,10 +134,12 @@ class MethodBase:
         comp = getattr(self, "comp", None)
         if comp is None:
             return self.bits_per_round(d)
-        from ..core.compressors import canonical_float_bits, payload_bits
+        from ..core.compressors import canonical_float_bits
+        from ..wire.report import wire_cost
 
-        return (payload_bits(comp, (d, d), index_coding=index_coding)
-                + (d + 1) * canonical_float_bits())
+        rep = wire_cost(comp, (d, d), encoded=False)
+        s_bits = rep.entropy_bits if index_coding == "entropy" else rep.raw_bits
+        return s_bits + (d + 1) * canonical_float_bits()
 
     def run(self, x0, n, num_rounds, *args, seed: int = 0, **init_kw):
         """Run ``num_rounds`` communication rounds from ``x0``.
@@ -180,6 +182,14 @@ def _ensure_registered() -> None:
 def available_methods() -> list[str]:
     _ensure_registered()
     return sorted(_REGISTRY)
+
+
+def registered_methods() -> dict[str, Callable[..., Any]]:
+    """Snapshot of the method registry (name -> factory) — the
+    introspection hook the static-analysis sweep (``repro.analysis``)
+    enumerates so every registered method gets traced and checked."""
+    _ensure_registered()
+    return dict(_REGISTRY)
 
 
 def make_method(name: str, oracles: Oracles, compressor=None, **params):

@@ -1,2 +1,30 @@
 from .ops import block_topk, block_topk_payload
 from .ref import block_topk_payload_ref, block_topk_ref, payload_to_dense
+
+
+def analysis_targets():
+    """Representative traced configs for the static-analysis sweep
+    (``repro.analysis``): name -> lazy ClosedJaxpr + rule context. The
+    Pallas body is forced (use_pallas/interpret) so the kernel is in
+    the jaxpr on any backend — tracing never executes it."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    return [
+        {
+            "name": "block_topk[512x512,k=32,b=128]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda m: block_topk(m, k=32, block=128,
+                                     interpret=True))(x),
+            "context": {"block": 128},
+        },
+        {
+            "name": "block_topk_payload[512x512,k=32,b=128]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda m: block_topk_payload(m, k=32, block=128,
+                                             use_pallas=True,
+                                             interpret=True))(x),
+            "context": {"block": 128},
+        },
+    ]

@@ -1,2 +1,21 @@
 from .ops import flash_attention
 from .ref import flash_attention_ref
+
+
+def analysis_targets():
+    """Representative traced config for the static-analysis sweep: the
+    causal online-softmax serving path. Pallas body forced;
+    trace-only."""
+    import jax
+    import jax.numpy as jnp
+
+    q = jax.ShapeDtypeStruct((1, 384, 2, 64), jnp.float32)
+    return [
+        {
+            "name": "flash_attention[T=384,bq=bk=128]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128,
+                                                interpret=True))(q, q, q),
+            "context": {},
+        },
+    ]

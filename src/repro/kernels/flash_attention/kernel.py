@@ -19,7 +19,6 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
                   scale: float):
     qi = pl.program_id(1)
     q = q_ref[...].astype(jnp.float32) * scale            # (bq, hd)
-    t = k_ref.shape[0]
     hd = q.shape[-1]
 
     m0 = jnp.full((bq,), -1e30, jnp.float32)

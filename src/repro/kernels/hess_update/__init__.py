@@ -1,2 +1,21 @@
 from .ops import hess_update
 from .ref import hess_update_ref
+
+
+def analysis_targets():
+    """Representative traced config for the static-analysis sweep: the
+    fused H += alpha*S + ||D - H||_F pass. Pallas body forced;
+    trace-only."""
+    import jax
+    import jax.numpy as jnp
+
+    m = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    return [
+        {
+            "name": "hess_update[512x512,b=128]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda h, d, s: hess_update(h, d, s, 0.5, block=128,
+                                            interpret=True))(m, m, m),
+            "context": {"block": 128},
+        },
+    ]

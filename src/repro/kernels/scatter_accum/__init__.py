@@ -1,3 +1,47 @@
 from .kernel import scatter_accum_tiled_kernel
 from .ops import block_scatter_accumulate, scatter_accumulate
 from .ref import block_scatter_accumulate_ref, scatter_accumulate_ref
+
+
+def analysis_targets():
+    """Representative traced configs for the static-analysis sweep:
+    both dispatch regimes of ``scatter_accumulate`` (single-block and
+    VMEM-tiled — the tiled shape would blow the budget single-block)
+    plus the block-sparse path. Pallas bodies forced; trace-only."""
+    import jax
+    import jax.numpy as jnp
+
+    def pair(n, k):
+        return (jax.ShapeDtypeStruct((n, k), jnp.float32),
+                jax.ShapeDtypeStruct((n, k), jnp.int32))
+
+    v_s, i_s = pair(4, 512)
+    v_t, i_t = pair(4, 2048)
+    v_b = jax.ShapeDtypeStruct((3, 16, 64), jnp.float32)
+    i_b = jax.ShapeDtypeStruct((3, 16, 64), jnp.int32)
+    return [
+        {
+            "name": "scatter_accumulate[512x512,single-block]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda v, i: scatter_accumulate(
+                    v, i, (512, 512), use_pallas=True,
+                    interpret=True))(v_s, i_s),
+            "context": {},
+        },
+        {
+            "name": "scatter_accumulate[4096x4096,tiled]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda v, i: scatter_accumulate(
+                    v, i, (4096, 4096), use_pallas=True,
+                    interpret=True))(v_t, i_t),
+            "context": {},
+        },
+        {
+            "name": "block_scatter_accumulate[4x4 grid,b=128]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda v, i: block_scatter_accumulate(
+                    v, i, (4, 4), 128, use_pallas=True,
+                    interpret=True))(v_b, i_b),
+            "context": {"block": 128},
+        },
+    ]

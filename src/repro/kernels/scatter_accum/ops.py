@@ -18,18 +18,24 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import (block_scatter_accum_kernel, scatter_accum_kernel,
-                     scatter_accum_tiled_kernel)
+from .. import VMEM_BUDGET_BYTES
+from .kernel import (
+    block_scatter_accum_kernel,
+    scatter_accum_kernel,
+    scatter_accum_tiled_kernel,
+)
 from .ref import block_scatter_accumulate_ref, scatter_accumulate_ref
 
 _CHUNK = 512  # (value, index) pairs per kernel program
 
 # Single-block vs tiled dispatch: the single-block kernel holds the
 # whole padded accumulator in ONE VMEM block, which is only legal while
-# it fits this budget (8 MiB of the ~16 MiB/core VMEM, leaving room for
-# the chunk one-hots); beyond it the tiled kernel streams the pair
-# stream per (tm, tn) output tile, so arbitrary d scales.
-_VMEM_ACC_BUDGET_BYTES = 8 * 1024 * 1024
+# it fits the shared kernel budget (8 MiB of the ~16 MiB/core VMEM,
+# leaving room for the chunk one-hots); beyond it the tiled kernel
+# streams the pair stream per (tm, tn) output tile, so arbitrary d
+# scales. The constant lives in ``repro.kernels`` so the vmem-budget
+# analysis rule and the dispatch agree by construction.
+_VMEM_ACC_BUDGET_BYTES = VMEM_BUDGET_BYTES
 _TILE = (512, 512)  # default tiled-path output block (1 MiB f32)
 
 

@@ -1,2 +1,28 @@
-from .ops import tiled_matmul, powersgd_rank_r
-from .ref import tiled_matmul_ref, powersgd_rank_r_ref
+from .ops import powersgd_rank_r, tiled_matmul
+from .ref import powersgd_rank_r_ref, tiled_matmul_ref
+
+
+def analysis_targets():
+    """Representative traced configs for the static-analysis sweep: the
+    MXU-tiled matmul and the PowerSGD subspace iteration built on it.
+    Pallas bodies forced; trace-only."""
+    import jax
+    import jax.numpy as jnp
+
+    a = jax.ShapeDtypeStruct((384, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 384), jnp.float32)
+    m = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    return [
+        {
+            "name": "tiled_matmul[384x256 @ 256x384]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda x, y: tiled_matmul(x, y, interpret=True))(a, b),
+            "context": {},
+        },
+        {
+            "name": "powersgd_rank_r[512x512,r=2]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda x: powersgd_rank_r(x, 2, interpret=True))(m),
+            "context": {},
+        },
+    ]

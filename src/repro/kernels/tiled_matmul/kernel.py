@@ -9,8 +9,6 @@ to 128 by the ops wrapper's padding.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

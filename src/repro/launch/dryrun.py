@@ -26,17 +26,27 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import Roofline, collective_bytes, model_flops
-from repro.launch.shapes import (SHAPES, decode_input_specs, skip_reason,
-                                 token_batch_specs)
-from repro.launch.sharding import (batch_specs, cache_specs,
-                                   make_activation_sharder,
-                                   make_layer_param_constrainer,
-                                   tree_param_specs)
-from repro.launch.steps import make_optimizer, make_prefill, make_serve_step, \
-    make_train_step
+from repro.launch.shapes import (
+    SHAPES,
+    decode_input_specs,
+    skip_reason,
+    token_batch_specs,
+)
+from repro.launch.sharding import (
+    batch_specs,
+    cache_specs,
+    make_activation_sharder,
+    make_layer_param_constrainer,
+    tree_param_specs,
+)
+from repro.launch.steps import (
+    make_optimizer,
+    make_prefill,
+    make_serve_step,
+    make_train_step,
+)
 from repro.models import build_model
 from repro.models.common import set_activation_sharder
-from repro.second_order.optim import OptState
 
 
 def _opt_state_shardings(opt_shape, param_shards, mesh):

@@ -14,8 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.launch.mesh import make_host_mesh
-from repro.launch.sharding import (make_activation_sharder,
-                                   make_layer_param_constrainer)
+from repro.launch.sharding import make_activation_sharder, make_layer_param_constrainer
 from repro.launch.steps import make_serve_step
 from repro.models import build_model
 from repro.models.common import set_activation_sharder

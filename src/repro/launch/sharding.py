@@ -13,13 +13,13 @@ Layout (see DESIGN.md §5):
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
+
 from .mesh import batch_axes
 
 
@@ -224,7 +224,6 @@ def cache_specs(cache_shape: Any, mesh: Mesh, cfg: ModelConfig):
             return type(tree)(walk(v, prefix + f"/{i}") for i, v in enumerate(tree))
         shape = tree.shape
         name = prefix.split("/")[-1]
-        stacked = name not in ("enc",)
         # layouts by leaf name
         if name in ("k", "v"):           # (seg, B, S, KV, hd)
             wants = (None, ba, None, "model", None)

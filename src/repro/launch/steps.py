@@ -11,9 +11,6 @@ structured-curvature preconditioner — see second_order/fednl_precond.py).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

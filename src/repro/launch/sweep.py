@@ -84,7 +84,6 @@ def main(argv=None) -> int:
     mesh = None
     if args.sharded:
         mesh = jax.make_mesh((jax.device_count(),), ("data",))
-    import jax.numpy as jnp
 
     x0 = prob["xstar"] + 0.05 * jax.random.normal(
         jax.random.PRNGKey(1), (prob["d"],))

@@ -14,15 +14,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import save as save_ckpt
 from repro.configs import ARCHS, get_config
 from repro.data.tokens import TokenPipeline
 from repro.launch.mesh import make_host_mesh
-from repro.launch.sharding import (make_activation_sharder,
-                                   make_layer_param_constrainer,
-                                   tree_param_specs)
+from repro.launch.sharding import make_activation_sharder, make_layer_param_constrainer
 from repro.launch.steps import make_optimizer, make_train_step
 from repro.models import build_model
 from repro.models.common import set_activation_sharder

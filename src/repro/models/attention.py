@@ -10,8 +10,6 @@ Cache layouts:
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -75,7 +73,6 @@ def _sdpa_chunked(q, k, v, n_rep: int, window, chunk: int = SDPA_CHUNK):
     """Causal attention, scanning over query chunks. q: (B,T,H,hd) with
     query i at absolute position i; k/v: (B,T,KV,hd)."""
     b, t, h, hd = q.shape
-    kv = k.shape[2]
     pad = (-t) % chunk
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))

@@ -17,7 +17,7 @@ explicit carve-out: ``input_specs`` supplies precomputed embeddings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax.numpy as jnp
 

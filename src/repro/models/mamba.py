@@ -107,7 +107,6 @@ def _ssm_scan(u, dt, b, c, a, chunk: int = SSM_CHUNK):
 def mamba_forward(p, x, cfg: ModelConfig):
     m = cfg.mamba
     b_, t, d = x.shape
-    di = m.expand * d
     uz = x @ p["win"]
     u, z = jnp.split(uz, 2, axis=-1)                        # (B,T,Di) each
 
@@ -139,7 +138,6 @@ def mamba_init_cache(cfg: ModelConfig, batch: int):
 
 def mamba_decode(p, x, cache, cfg: ModelConfig):
     """x: (B, 1, d); O(1) state update."""
-    m = cfg.mamba
     b_, _, d = x.shape
     uz = x @ p["win"]
     u, z = jnp.split(uz, 2, axis=-1)                        # (B,1,Di)

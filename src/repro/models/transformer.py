@@ -17,18 +17,20 @@ rules in launch/sharding.py so model code stays mesh-free apart from
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import attention as attn
-from . import mamba as mam
-from . import mlp as ff
-from . import xlstm as xl
-from .common import (apply_norm, cross_entropy, embed_init, norm_params,
-                     shard_act, shard_layer_params)
+from . import attention as attn, mamba as mam, mlp as ff, xlstm as xl
+from .common import (
+    apply_norm,
+    cross_entropy,
+    embed_init,
+    norm_params,
+    shard_act,
+    shard_layer_params,
+)
 from .config import ModelConfig
 
 Params = Dict[str, Any]
@@ -98,25 +100,21 @@ def _layer_forward(p, x, cfg: ModelConfig, mixer: str, ffn: str,
     h = apply_norm(x, p["norm1"], cfg.norm)
     if mixer == "attn":
         if causal:
-            y, cache = attn.gqa_forward(p["mixer"], h, cfg)
+            y, _ = attn.gqa_forward(p["mixer"], h, cfg)
         else:  # encoder self-attention
             b, t, _ = h.shape
             q, k, v = attn._qkv(p["mixer"], h, cfg)
             mask = jnp.ones((t, t), bool)
             out = attn._sdpa(q, k, v, mask, cfg.n_heads // cfg.kv_heads)
             y = out.reshape(b, t, -1) @ p["mixer"]["wo"]
-            cache = None
     elif mixer == "mla":
-        y, cache = attn.mla_forward(p["mixer"], h, cfg)
+        y, _ = attn.mla_forward(p["mixer"], h, cfg)
     elif mixer == "mamba":
         y = mam.mamba_forward(p["mixer"], h, cfg)
-        cache = None
     elif mixer == "mlstm":
         y = xl.mlstm_forward(p["mixer"], h, cfg)
-        cache = None
     else:  # slstm
         y = xl.slstm_forward(p["mixer"], h, cfg)
-        cache = None
     x = x + y
 
     if memory is not None:

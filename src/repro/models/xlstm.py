@@ -32,7 +32,6 @@ from .config import ModelConfig
 
 def mlstm_init(key, cfg: ModelConfig):
     d, h = cfg.d_model, cfg.n_heads
-    hd = d // h
     ks = jax.random.split(key, 6)
     return {
         "wq": dense_init(ks[0], d, d, cfg.jdtype),
@@ -197,7 +196,6 @@ def slstm_init(key, cfg: ModelConfig):
 def _slstm_cell(carry, pre):
     """carry = (c, n, h, m); pre = x-projection at t (B, 4d) fp32."""
     c, n, h, m = carry
-    d = c.shape[-1]
     zi, zf, zz, zo = jnp.split(pre, 4, axis=-1)
     logi = zi                                               # exp input gate (log)
     logf = jax.nn.log_sigmoid(zf)

@@ -1,2 +1,2 @@
-from .optim import adamw, sgd, OptState
 from .fednl_precond import FedNLPrecondOptimizer, fednl_precond
+from .optim import OptState, adamw, sgd

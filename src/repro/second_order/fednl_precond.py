@@ -57,10 +57,10 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import (BlockSparsePayload, BlockTopK,
-                                    BlockTopKThreshold)
+from repro.core.compressors import BlockSparsePayload, BlockTopK, BlockTopKThreshold
 from repro.kernels.block_topk import block_topk_payload
-from .optim import Optimizer, OptState
+
+from .optim import Optimizer
 
 
 class FedNLPrecondState(NamedTuple):

@@ -11,11 +11,24 @@ brief.
 """
 
 from .bitio import BitReader, BitWriter, best_rice_param
-from .codec import (VALUE_FORMATS, WireFormatError, canonical, decode,
-                    encode, encode_silos, encoded_bytes)
+from .codec import (
+    VALUE_FORMATS,
+    WireFormatError,
+    canonical,
+    decode,
+    encode,
+    encode_silos,
+    encoded_bytes,
+)
 from .report import WireReport, silo_encoded_bytes, wire_cost
-from .traffic import (PRESETS, LinkModel, link_model, round_seconds,
-                      seconds_curve, transfer_seconds)
+from .traffic import (
+    PRESETS,
+    LinkModel,
+    link_model,
+    round_seconds,
+    seconds_curve,
+    transfer_seconds,
+)
 
 __all__ = [
     "BitReader", "BitWriter", "best_rice_param",

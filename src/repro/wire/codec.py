@@ -56,15 +56,26 @@ from __future__ import annotations
 
 import dataclasses
 import struct
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
-from ..core.compressors import (BlockSparsePayload, DensePayload,
-                                DitheredPayload, LowRankPayload,
-                                SparsePayload)
-from .bitio import (BitReader, BitWriter, best_rice_param, read_rice_stream,
-                    unzigzag, write_rice_stream, zigzag)
+from ..core.compressors import (
+    BlockSparsePayload,
+    DensePayload,
+    DitheredPayload,
+    LowRankPayload,
+    SparsePayload,
+)
+from .bitio import (
+    BitReader,
+    BitWriter,
+    best_rice_param,
+    read_rice_stream,
+    unzigzag,
+    write_rice_stream,
+    zigzag,
+)
 
 _MAGIC = 0xFE
 _VERSION = 1

@@ -25,7 +25,7 @@ code keeps working; new code should go through ``wire_cost``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from typing import Union
 
 import numpy as np
 
@@ -48,7 +48,7 @@ class WireReport:
     analytic_bits: int
     raw_bits: int
     entropy_bits: int
-    encoded_bytes: int
+    encoded_bytes: int  # 0 when the report was built with encoded=False
     value_format: str = "raw"
 
     @property
@@ -63,17 +63,21 @@ class WireReport:
 
 
 def wire_cost(comp, shape, *, dtype=None, value_format: str = "raw",
-              sample=None, key=None) -> WireReport:
+              sample=None, key=None, encoded: bool = True) -> WireReport:
     """The single wire-cost entry point: one ``WireReport`` per
     (compressor, shape).
 
     ``dtype`` defaults to the ambient float (f64 under x64 — the
     paper's accounting). ``sample`` supplies the matrix the codec
     encodes (defaults to a deterministic standard normal); ``key`` the
-    PRNG key randomized compressors consume. Supersedes the deprecated
-    quartet ``comp.bits(shape)`` / ``comp.spec(shape).bits`` /
-    ``payload_bits(comp, shape)`` / ``payload.bits(index_coding=...)``
-    — all of which remain as aliases of the first three fields."""
+    PRNG key randomized compressors consume. ``encoded=False`` skips
+    the compress + codec run entirely (``encoded_bytes`` is 0): the
+    remaining three fields are shape-static (eval_shape, zero FLOPs),
+    which is what per-round accounting like ``bits_per_round`` wants.
+    Supersedes the deprecated quartet ``comp.bits(shape)`` /
+    ``comp.spec(shape).bits`` / ``payload_bits(comp, shape)`` /
+    ``payload.bits(index_coding=...)`` — all of which remain as aliases
+    of the first three fields."""
     import jax
     import jax.numpy as jnp
 
@@ -82,18 +86,23 @@ def wire_cost(comp, shape, *, dtype=None, value_format: str = "raw",
     shape = tuple(int(s) for s in shape)
     if dtype is None:
         dtype = jnp.result_type(float)
-    if sample is None:
-        sample = jax.random.normal(jax.random.PRNGKey(0), shape,
-                                   dtype=jnp.dtype(dtype))
-    if key is None:
-        key = jax.random.PRNGKey(1)
-    payload = comp.compress(jnp.asarray(sample, dtype=jnp.dtype(dtype)), key)
+    if encoded:
+        if sample is None:
+            sample = jax.random.normal(jax.random.PRNGKey(0), shape,
+                                       dtype=jnp.dtype(dtype))
+        if key is None:
+            key = jax.random.PRNGKey(1)
+        payload = comp.compress(jnp.asarray(sample, dtype=jnp.dtype(dtype)),
+                                key)
+        nbytes = encoded_bytes(payload, value_format=value_format)
+    else:
+        nbytes = 0
     return WireReport(
         analytic_bits=int(comp.spec(shape).bits),
         raw_bits=int(payload_bits(comp, shape, dtype=dtype)),
         entropy_bits=int(payload_bits(comp, shape, dtype=dtype,
                                       index_coding="entropy")),
-        encoded_bytes=encoded_bytes(payload, value_format=value_format),
+        encoded_bytes=nbytes,
         value_format=value_format,
     )
 

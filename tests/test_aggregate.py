@@ -22,10 +22,16 @@ import pytest
 from jax.experimental import enable_x64
 
 from repro.core import FedNL, FedNLPP, TopK
-from repro.core.compressors import (BlockSparsePayload, BlockTopKThreshold,
-                                    Compressor, SparsePayload,
-                                    available_compressors, make_compressor,
-                                    payload_bits, scale_payload)
+from repro.core.compressors import (
+    BlockSparsePayload,
+    BlockTopKThreshold,
+    Compressor,
+    SparsePayload,
+    available_compressors,
+    make_compressor,
+    payload_bits,
+    scale_payload,
+)
 from repro.core.objectives import batch_grad, batch_hess
 from repro.data.synthetic import make_synthetic
 

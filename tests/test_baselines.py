@@ -4,12 +4,24 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import RandomDithering, RandK
-from repro.core.baselines import (Adiana, Artemis, Diana, Dingo, Dore, NL1,
-                                  gd_ls_run, gd_run)
+from repro.core import RandomDithering
+from repro.core.baselines import (
+    NL1,
+    Adiana,
+    Artemis,
+    Diana,
+    Dingo,
+    Dore,
+    gd_ls_run,
+    gd_run,
+)
 from repro.core.newton import newton_run
-from repro.core.objectives import (batch_grad, batch_hess, global_value,
-                                   lipschitz_constants)
+from repro.core.objectives import (
+    batch_grad,
+    batch_hess,
+    global_value,
+    lipschitz_constants,
+)
 from repro.data.synthetic import make_synthetic
 
 

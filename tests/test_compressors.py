@@ -13,13 +13,26 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the optional [test] extra")
 from hypothesis import given, settings, strategies as st
 
-from _dense_refs import (blocktopk_dense_ref, randk_dense_ref,
-                         rankr_dense_ref, topk_dense_ref)
-from repro.core.compressors import (BlockTopK, BlockTopKThreshold, Identity,
-                                    NaturalSparsification, PowerSGD, RandK,
-                                    RandomDithering, RankR, TopK, Zero,
-                                    ab_constants, alpha_for,
-                                    available_compressors, make_compressor)
+from _dense_refs import (
+    blocktopk_dense_ref,
+    randk_dense_ref,
+    rankr_dense_ref,
+    topk_dense_ref,
+)
+from repro.core.compressors import (
+    BlockTopK,
+    BlockTopKThreshold,
+    Identity,
+    NaturalSparsification,
+    PowerSGD,
+    RandK,
+    RandomDithering,
+    RankR,
+    TopK,
+    Zero,
+    ab_constants,
+    alpha_for,
+)
 
 DIMS = st.integers(min_value=2, max_value=24)
 

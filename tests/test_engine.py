@@ -7,12 +7,17 @@ import numpy as np
 import pytest
 from jax.experimental import enable_x64
 
-from repro.core import (FedNL, FedNLBC, FedNLCR, FedNLLS, FedNLPP, RankR,
-                        TopK)
+from repro.core import FedNL, FedNLBC, FedNLCR, FedNLLS, FedNLPP, RankR, TopK
 from repro.core.objectives import batch_grad, batch_hess, global_value
 from repro.data.synthetic import make_synthetic
-from repro.engine import (ExperimentSpec, Oracles, Sweep, available_methods,
-                          build_compressor, make_method)
+from repro.engine import (
+    ExperimentSpec,
+    Oracles,
+    Sweep,
+    available_methods,
+    build_compressor,
+    make_method,
+)
 
 D, N = 12, 8
 

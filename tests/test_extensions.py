@@ -9,8 +9,7 @@ import pytest
 from repro.core import RankR, TopK
 from repro.core.extensions import FedNLPPBC, StochasticFedNL
 from repro.core.newton import newton_run
-from repro.core.objectives import (batch_grad, batch_hess, global_value,
-                                   silo_hess)
+from repro.core.objectives import batch_grad, batch_hess, global_value, silo_hess
 from repro.data.synthetic import make_synthetic
 
 
@@ -70,12 +69,12 @@ def test_stochastic_fednl_communication_vs_newton(prob):
     diffs) while stochastic Newton ships the full d x d Hessian. (Plain
     stochastic Newton is NOT noisier near x* with exact gradients — a
     refuted initial hypothesis, kept here as documentation.)"""
-    from repro.core import FedNL, Identity
+    from repro.core import Identity
     from repro.core.compressors import FLOAT_BITS
 
     d = 16
-    alg = StochasticFedNL(prob["grad"], _subsampled_hess(prob["data"], 16),
-                          RankR(2), alpha=0.5)
+    StochasticFedNL(prob["grad"], _subsampled_hess(prob["data"], 16),
+                    RankR(2), alpha=0.5)  # constructs cleanly
     bits_fednl = d * FLOAT_BITS + RankR(2).bits((d, d)) + FLOAT_BITS
     bits_newton = d * FLOAT_BITS + d * d * FLOAT_BITS
     assert bits_fednl < bits_newton / 2

@@ -10,11 +10,24 @@ import numpy as np
 import pytest
 from jax.experimental import enable_x64
 
-from repro.core import (FedNL, FedNLBC, FedNLCR, FedNLLS, FedNLPP, RandK,
-                        RankR, TopK, Zero)
-from repro.core.newton import fixed_hessian_run, n0_ls_run, newton_run
-from repro.core.objectives import (batch_grad, batch_hess, global_grad,
-                                   global_value, lipschitz_constants)
+from repro.core import (
+    FedNL,
+    FedNLBC,
+    FedNLCR,
+    FedNLLS,
+    FedNLPP,
+    RandK,
+    RankR,
+    TopK,
+    Zero,
+)
+from repro.core.newton import fixed_hessian_run, newton_run
+from repro.core.objectives import (
+    batch_grad,
+    batch_hess,
+    global_value,
+    lipschitz_constants,
+)
 from repro.data.synthetic import make_synthetic
 
 pytestmark = pytest.mark.slow
@@ -176,7 +189,6 @@ def test_newton_triangle_specializations(problem):
                     option=1, mu=1e-3)
         _, xs_fednl = alg.run(x0, 8, 8)
         h0 = jnp.mean(problem["hess"](x0), axis=0)
-        from repro.core.linalg import project_psd
         _, xs_n0 = fixed_hessian_run(x0, h0, problem["grad"], 8, mu=1e-3)
         np.testing.assert_allclose(np.asarray(xs_fednl),
                                    np.asarray(xs_n0), atol=1e-10)

@@ -14,13 +14,12 @@ import pytest
 from repro.checkpoint import restore, save
 from repro.core import FedNL, RankR
 from repro.core.federated import run_fednl_sharded
-from repro.core.objectives import batch_grad, batch_hess, global_value
+from repro.core.objectives import batch_grad, batch_hess
 from repro.data.libsvm import parse_libsvm, partition_across_silos
 from repro.data.synthetic import make_iid, make_libsvm_like, make_synthetic
 from repro.data.tokens import TokenPipeline
 from repro.second_order import adamw, fednl_precond, sgd
-from repro.second_order.fednl_precond import (FedNLPrecondOptimizer,
-                                              FedNLPrecondState)
+from repro.second_order.fednl_precond import FedNLPrecondOptimizer, FedNLPrecondState
 from repro.second_order.optim import apply_updates
 
 
@@ -165,60 +164,41 @@ def test_fednl_precond_update_rule_matches_docstring():
     np.testing.assert_allclose(np.asarray(upd["w"]), want, rtol=1e-5)
 
 
-def _jaxpr_has_blocksq_intermediate(jaxpr, bb: int) -> bool:
-    """Walk a (closed) jaxpr recursively — skipping pallas_call bodies,
-    whose in-kernel tiles are VMEM-resident by construction — and
-    report whether any equation emits an array with a block^2 trailing
-    dim (the dense selection mask / dense scatter round-trip)."""
-    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for v in eqn.outvars:
-            shape = getattr(v.aval, "shape", ())
-            if shape and int(shape[-1]) == bb:
-                return True
-        for p in eqn.params.values():
-            for sub in jax.tree.leaves(
-                    p, is_leaf=lambda x: hasattr(x, "eqns")
-                    or hasattr(x, "jaxpr")):
-                if (hasattr(sub, "eqns") or hasattr(sub, "jaxpr")) \
-                        and _jaxpr_has_blocksq_intermediate(sub, bb):
-                    return True
-    return False
-
-
 def test_fednl_precond_pallas_path_builds_no_dense_selection_mask():
     """Acceptance: with the Pallas payload ops forced (the TPU path,
     trace-only so it runs anywhere), the jaxpr of ``update`` contains
     no intermediate with a block^2 = 16384 trailing dim outside
     pallas_call bodies — neither the dense selection mask nor the dense
-    per-tile scatter round-trip exists in the training step. The codec
-    compress (the PR-3-era path) is the positive control proving the
-    detector sees such masks."""
+    per-tile scatter round-trip exists in the training step. The jaxpr
+    walk lives in ``repro.analysis`` (the ``no-dense-roundtrip`` rule —
+    the registry sweep applies it to every precond/kernel target); this
+    test keeps the original call sites pinned plus the codec-compress
+    positive control proving the detector sees such masks."""
+    from repro import analysis
+
     d, block = 256, 128
-    bb = block * block
     opt = FedNLPrecondOptimizer(lr=0.1, k_per_block=32, block=block,
                                 use_pallas=True)
     params = {"w": jnp.zeros((d, d))}
     state = opt.init(params)
     grads = {"w": jnp.ones((d, d))}
 
-    single = jax.make_jaxpr(
-        lambda g, s: opt.update(g, s, params))(grads, state)
-    assert not _jaxpr_has_blocksq_intermediate(single, bb)
+    analysis.check(lambda g, s: opt.update(g, s, params), grads, state,
+                   rules=["no-dense-roundtrip"], context={"block": block})
 
     obs = {"w": jnp.ones((3, d, d))}
-    silo = jax.make_jaxpr(
-        lambda g, s, o: opt.update(g, s, params, observations=o))(
-            grads, state, obs)
-    assert not _jaxpr_has_blocksq_intermediate(silo, bb)
+    analysis.check(lambda g, s, o: opt.update(g, s, params, observations=o),
+                   grads, state, obs,
+                   rules=["no-dense-roundtrip"], context={"block": block})
 
     # positive control: the jnp codec DOES build (nblocks, block^2)
     comp = opt.compressor
-    codec = jax.make_jaxpr(lambda m: comp.decompress(
-        comp.compress(m), m.shape))(grads["w"])
-    assert _jaxpr_has_blocksq_intermediate(codec, bb)
+    violations = analysis.check(
+        lambda m: comp.decompress(comp.compress(m), m.shape), grads["w"],
+        rules=["no-dense-roundtrip"], context={"block": block},
+        raise_on_violation=False)
+    assert violations
+    assert {v.rule for v in violations} == {"no-dense-roundtrip"}
 
 
 # -- shard_map federated runtime -------------------------------------------------

@@ -6,17 +6,27 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.block_topk import (block_topk, block_topk_payload,
-                                      block_topk_payload_ref, block_topk_ref,
-                                      payload_to_dense)
+from repro.kernels.block_topk import (
+    block_topk,
+    block_topk_payload,
+    block_topk_payload_ref,
+    block_topk_ref,
+    payload_to_dense,
+)
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.hess_update import hess_update, hess_update_ref
-from repro.kernels.scatter_accum import (block_scatter_accumulate,
-                                         block_scatter_accumulate_ref,
-                                         scatter_accumulate,
-                                         scatter_accumulate_ref)
-from repro.kernels.tiled_matmul import (powersgd_rank_r, powersgd_rank_r_ref,
-                                        tiled_matmul, tiled_matmul_ref)
+from repro.kernels.scatter_accum import (
+    block_scatter_accumulate,
+    block_scatter_accumulate_ref,
+    scatter_accumulate,
+    scatter_accumulate_ref,
+)
+from repro.kernels.tiled_matmul import (
+    powersgd_rank_r,
+    powersgd_rank_r_ref,
+    tiled_matmul,
+    tiled_matmul_ref,
+)
 
 SHAPES_2D = [(128, 128), (256, 128), (300, 123), (64, 200), (17, 31)]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -52,7 +62,6 @@ def test_block_topk_bf16_semantics(shape, k):
     np.testing.assert_allclose(xo[kept], xi[kept])
     # magnitude selection: every kept entry >= every dropped entry within
     # the single 128-block (shapes here are <= 128x... per block) up to ties
-    numel = xi.size
     assert kept.sum() >= min(k, (np.abs(xi) > 0).sum()) * 0.99
     # contraction with delta = k/block^2 per tile
     nm2 = float((xi ** 2).sum())

@@ -9,8 +9,7 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the optional [test] extra")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.linalg import (frob_norm, project_psd, solve_cubic_subproblem,
-                               symmetrize)
+from repro.core.linalg import frob_norm, project_psd, solve_cubic_subproblem, symmetrize
 
 
 @settings(max_examples=20, deadline=None)

@@ -11,12 +11,24 @@ import numpy as np
 import pytest
 from jax.experimental import enable_x64
 
-from _dense_refs import (blocktopk_dense_ref, randk_dense_ref,
-                         rankr_dense_ref, topk_dense_ref)
-from repro.core.compressors import (FLOAT_BITS, INDEX_BITS, BlockTopK,
-                                    RandK, RankR, TopK, Zero,
-                                    available_compressors, make_compressor,
-                                    payload_bits)
+from _dense_refs import (
+    blocktopk_dense_ref,
+    randk_dense_ref,
+    rankr_dense_ref,
+    topk_dense_ref,
+)
+from repro.core.compressors import (
+    FLOAT_BITS,
+    INDEX_BITS,
+    BlockTopK,
+    RandK,
+    RankR,
+    TopK,
+    Zero,
+    available_compressors,
+    make_compressor,
+    payload_bits,
+)
 
 # -- bits clamps (regression: no overcount on small problems) ----------------
 

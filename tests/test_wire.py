@@ -4,7 +4,6 @@ of vmapped payload stacks, the traffic model, the unified ``WireReport``
 cost API vs its deprecated aliases, and the ``seconds_per_round`` sweep
 column."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -12,15 +11,38 @@ import numpy as np
 import pytest
 from jax.experimental import enable_x64
 
-from repro.core import (BlockTopK, DensePayload, DitheredPayload, Identity,
-                        LowRankPayload, NaturalSparsification, PowerSGD,
-                        RandK, RandomDithering, RankR, SparsePayload, TopK,
-                        payload_bits)
-from repro.wire import (PRESETS, LinkModel, WireFormatError, WireReport,
-                        canonical, decode, encode, encode_silos,
-                        encoded_bytes, link_model, round_seconds,
-                        seconds_curve, silo_encoded_bytes, transfer_seconds,
-                        wire_cost)
+from repro.core import (
+    BlockTopK,
+    DensePayload,
+    DitheredPayload,
+    Identity,
+    LowRankPayload,
+    NaturalSparsification,
+    PowerSGD,
+    RandK,
+    RandomDithering,
+    RankR,
+    SparsePayload,
+    TopK,
+    payload_bits,
+)
+from repro.wire import (
+    PRESETS,
+    LinkModel,
+    WireFormatError,
+    WireReport,
+    canonical,
+    decode,
+    encode,
+    encode_silos,
+    encoded_bytes,
+    link_model,
+    round_seconds,
+    seconds_curve,
+    silo_encoded_bytes,
+    transfer_seconds,
+    wire_cost,
+)
 
 D = 16
 
