@@ -116,7 +116,14 @@ class NoDenseRoundtrip(Rule):
 
     def check(self, jaxpr, target: Target):
         block = int(target.context.get("block", 0))
-        if not block:
+        # ``dense_forbidden``: an exact shape (e.g. the full (d, d) diff
+        # a fused diff->select->payload kernel keeps out of HBM) that
+        # must not appear as any equation output outside kernel bodies.
+        # Separate from ``block`` because fused-uplink targets have
+        # legitimate (d, d)-shaped *inputs* but may never rebuild the
+        # dense difference as an intermediate.
+        forbidden = tuple(target.context.get("dense_forbidden", ()))
+        if not block and not forbidden:
             return []
         bb = block * block
         out = []
@@ -125,11 +132,18 @@ class NoDenseRoundtrip(Rule):
                 continue
             for v in eqn.outvars:
                 shape = shape_of(v)
-                if shape and shape[-1] == bb:
+                if block and shape and shape[-1] == bb:
                     out.append(self.violation(
                         target,
                         f"dense block^2={bb} trailing-dim intermediate "
                         "(selection mask / per-tile scatter round-trip)",
+                        describe_eqn(eqn)))
+                elif forbidden and shape == forbidden:
+                    out.append(self.violation(
+                        target,
+                        f"dense {forbidden} intermediate on a fused "
+                        "diff->payload path (the difference must stay "
+                        "tile-resident inside the kernel)",
                         describe_eqn(eqn)))
         return out
 

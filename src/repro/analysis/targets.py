@@ -51,7 +51,7 @@ _COMPRESSOR_LEVELS = {
 }
 
 _KERNEL_PACKAGES = ("block_topk", "scatter_accum", "hess_update",
-                    "tiled_matmul", "flash_attention")
+                    "tiled_matmul", "flash_attention", "tuning")
 
 _JAXPR_RULES = ("no-host-sync", "padding-sentinel")
 

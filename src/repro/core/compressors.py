@@ -343,19 +343,24 @@ def scale_payload(payload, w: jax.Array):
     return dataclasses.replace(payload, **{field: leaf * wb})
 
 
-def _sparse_aggregate(payloads: "SparsePayload", shape) -> jax.Array:
+def _sparse_aggregate(payloads: "SparsePayload", shape,
+                      symmetric: bool = False) -> jax.Array:
     """mean_i of stacked SparsePayloads via ONE dense accumulator
     (kernels/scatter_accum: Pallas one-hot-matmul scatter on TPU —
     single-block or output-tiled by VMEM budget, so any d — a single
     XLA scatter-add elsewhere). -1 padding is dropped; duplicate
-    indices across silos accumulate — exactly the server sum."""
+    indices across silos accumulate — exactly the server sum.
+    ``symmetric`` mirrors lower-triangular payloads inside the same
+    scatter pass (the fused symmetric-TopK server mean)."""
     from ..kernels.scatter_accum import scatter_accumulate
 
     n = payloads.values.shape[0]
     shape2 = tuple(int(s) for s in shape)
     if len(shape2) != 2:  # vectors (downlink model payloads) etc.
         shape2 = (1, numel(shape))
-    total = scatter_accumulate(payloads.values, payloads.indices, shape2)
+        symmetric = False
+    total = scatter_accumulate(payloads.values, payloads.indices, shape2,
+                               symmetric=symmetric)
     return (total / n).reshape(shape)
 
 
@@ -568,12 +573,14 @@ class TopK(Compressor):
 
     def aggregate(self, payloads: SparsePayload, shape) -> jax.Array:
         """Scatter-add all n*k (value, index) pairs into ONE dense
-        accumulator, then mean (and symmetrize — linear, so it commutes
-        with the mean). Never builds the (n, d, d) stack."""
-        c = _sparse_aggregate(payloads, shape)
-        if self.symmetric and len(shape) == 2 and shape[0] == shape[1]:
-            return c + c.T - jnp.diag(jnp.diag(c))
-        return c
+        accumulator, then mean. The symmetric mirror is FUSED into the
+        scatter itself (each off-diagonal pair lands at (r, c) and
+        (c, r) in the same kernel pass) instead of a second
+        ``c + c.T - diag(diag(c))`` sweep over the dense accumulator —
+        mirroring is linear, so it commutes with the mean. Never builds
+        the (n, d, d) stack."""
+        sym = self.symmetric and len(shape) == 2 and shape[0] == shape[1]
+        return _sparse_aggregate(payloads, shape, symmetric=sym)
 
     def spec(self, shape) -> CompSpec:
         slots = self._slots(shape)
@@ -647,6 +654,26 @@ class _BlockSparse(Compressor):
         return CompSpec(delta=self._k() / (b * b), omega=None,
                         bits=nblk * self._k() * (FLOAT_BITS + INDEX_BITS),
                         deterministic=True)
+
+    def fused_diff_payloads(self, h_new: jax.Array, h_old: jax.Array):
+        """Fused device uplink for stacked (n, d, d) Hessian pairs:
+        per silo, D_i = h_new_i - h_old_i is diffed, top-k-selected,
+        and payload-emitted inside ONE kernel (``diff_topk_payload``)
+        that also returns ||D_i||_F^2 — the dense difference never
+        round-trips through HBM on the Pallas path, and the l_i every
+        FedNL variant ships comes out of the same pass. Returns
+        (stacked BlockSparsePayload, (n,) Frobenius norms). Selection
+        semantics match ``compress``'s family contract: identical to
+        the sort-based reference off-TPU, bisection flat-order inside
+        tie clusters on the kernel path."""
+        from ..kernels.block_topk import diff_topk_payload
+
+        vals, idx, sq = jax.vmap(
+            lambda a, b: diff_topk_payload(a, b, k=self._k(),
+                                           block=self.block))(h_new, h_old)
+        payloads = BlockSparsePayload(values=vals, indices=idx,
+                                      universe=self.block * self.block)
+        return payloads, jnp.sqrt(sq)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -68,10 +68,9 @@ class StochasticFedNL(MethodBase):
 
         grads = self.grad_fn(state.x)
         hesses = self.hess_fn(state.x, k_h)          # noisy local Hessians
-        diff = hesses - state.h_local
-        payloads = self._uplink_payloads(diff, silo_keys)
-        s_i = self._local_hessians(payloads, diff.shape[1:])
-        l_i = jax.vmap(frob_norm)(diff)
+        payloads, l_i = self._uplink_diff_payloads(hesses, state.h_local,
+                                                   silo_keys)
+        s_i = self._local_hessians(payloads, hesses.shape[1:])
 
         grad = jnp.mean(grads, axis=0)
         l_mean = jnp.mean(l_i)
@@ -82,7 +81,7 @@ class StochasticFedNL(MethodBase):
             x=x_new,
             h_local=state.h_local + self.alpha * s_i,
             h_global=state.h_global + self.alpha * self._server_aggregate(
-                payloads, diff.shape[1:]),
+                payloads, hesses.shape[1:]),
             key=key, step=state.step + 1,
         )
 
@@ -172,8 +171,8 @@ class FedNLPPBC(MethodBase):
         silo_keys = jax.random.split(k_comp, n)
         hess_z = self.hess_fn(z_new)
         grads_z = self.grad_fn(z_new)
-        diff = hess_z - state.h_local
-        payloads = self._uplink_payloads(diff, silo_keys)
+        payloads, _ = self._uplink_diff_payloads(hess_z, state.h_local,
+                                                silo_keys)
         s_i = self._local_hessians(payloads, (d, d))
         h_upd = state.h_local + self.alpha * s_i
         l_upd = jax.vmap(frob_norm)(h_upd - hess_z)

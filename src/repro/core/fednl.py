@@ -35,7 +35,7 @@ import jax.numpy as jnp
 
 from ..engine.method import MethodBase, Oracles, register
 from .compressors import Compressor
-from .linalg import frob_norm, project_psd, solve_newton_system
+from .linalg import project_psd, solve_newton_system
 
 
 class FedNLState(NamedTuple):
@@ -111,16 +111,17 @@ class FedNL(MethodBase):
         grads = self.grad_fn(state.x)                     # (n, d)
         hesses = self.hess_fn(state.x)                    # (n, d, d)
 
-        diff = hesses - state.h_local                     # (n, d, d)
-        # devices uplink payloads; each silo keeps its OWN dense S_i for
-        # the local H_i update, the server means in payload space — the
-        # (n, d, d) decompressed stack never reaches the server
-        payloads = self._uplink_payloads(diff, silo_keys)
-        s_i = self._local_hessians(payloads, diff.shape[1:])
-        l_i = jax.vmap(frob_norm)(diff)                   # (n,)
+        # devices uplink payloads of D_i = hess_i - H_i (fused
+        # diff->select->payload where the compressor supports it, so the
+        # dense diff stays in VMEM); each silo keeps its OWN dense S_i
+        # for the local H_i update, the server means in payload space —
+        # the (n, d, d) decompressed stack never reaches the server
+        payloads, l_i = self._uplink_diff_payloads(hesses, state.h_local,
+                                                   silo_keys)
+        s_i = self._local_hessians(payloads, hesses.shape[1:])
 
         grad = self._mean(grads)
-        s_mean = self._server_aggregate(payloads, diff.shape[1:])
+        s_mean = self._server_aggregate(payloads, hesses.shape[1:])
         l_mean = self._mean(l_i)
 
         h_global = state.h_global + self.alpha * s_mean

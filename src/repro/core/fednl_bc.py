@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from ..engine.method import MethodBase, Oracles, register
 from .compressors import FLOAT_BITS, Compressor
-from .linalg import frob_norm, project_psd, solve_newton_system
+from .linalg import project_psd, solve_newton_system
 
 
 class FedNLBCState(NamedTuple):
@@ -88,10 +88,9 @@ class FedNLBC(MethodBase):
         grad_w_new = jnp.where(state.xi, grad_z, state.grad_w)
 
         hess_z = self.hess_fn(state.z)
-        diff = hess_z - state.h_local
-        payloads = self._uplink_payloads(diff, silo_keys)
-        s_i = self._local_hessians(payloads, diff.shape[1:])
-        l_i = jax.vmap(frob_norm)(diff)
+        payloads, l_i = self._uplink_diff_payloads(hess_z, state.h_local,
+                                                   silo_keys)
+        s_i = self._local_hessians(payloads, hess_z.shape[1:])
 
         # --- server --------------------------------------------------------
         g = jnp.mean(g_i, axis=0)
@@ -104,7 +103,7 @@ class FedNLBC(MethodBase):
 
         h_local = state.h_local + self.alpha * s_i
         h_global = state.h_global + self.alpha * self._server_aggregate(
-            payloads, diff.shape[1:])
+            payloads, hess_z.shape[1:])
 
         # downlink: the server broadcasts the compressed model increment
         # as a wire payload; every device decompresses and learns z

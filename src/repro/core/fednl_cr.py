@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from ..engine.method import MethodBase, Oracles, register
 from .compressors import FLOAT_BITS, Compressor
 from .fednl import FedNLState
-from .linalg import frob_norm, solve_cubic_subproblem
+from .linalg import solve_cubic_subproblem
 
 
 class FedNLCR(MethodBase):
@@ -53,10 +53,9 @@ class FedNLCR(MethodBase):
 
         grads = self.grad_fn(state.x)
         hesses = self.hess_fn(state.x)
-        diff = hesses - state.h_local
-        payloads = self._uplink_payloads(diff, silo_keys)
-        s_i = self._local_hessians(payloads, diff.shape[1:])
-        l_i = jax.vmap(frob_norm)(diff)
+        payloads, l_i = self._uplink_diff_payloads(hesses, state.h_local,
+                                                   silo_keys)
+        s_i = self._local_hessians(payloads, hesses.shape[1:])
 
         grad = jnp.mean(grads, axis=0)
         l_mean = jnp.mean(l_i)
@@ -70,7 +69,7 @@ class FedNLCR(MethodBase):
             x=x_new,
             h_local=state.h_local + self.alpha * s_i,
             h_global=state.h_global + self.alpha * self._server_aggregate(
-                payloads, diff.shape[1:]),
+                payloads, hesses.shape[1:]),
             key=key,
             step=state.step + 1,
         )

@@ -58,9 +58,9 @@ class FedNLLS(MethodBase):
 
         grads = self.grad_fn(state.x)
         hesses = self.hess_fn(state.x)
-        diff = hesses - state.h_local
-        payloads = self._uplink_payloads(diff, silo_keys)
-        s_i = self._local_hessians(payloads, diff.shape[1:])
+        payloads, _ = self._uplink_diff_payloads(hesses, state.h_local,
+                                                silo_keys)
+        s_i = self._local_hessians(payloads, hesses.shape[1:])
 
         grad = jnp.mean(grads, axis=0)
         h_eff = project_psd(state.h_global, self.mu)
@@ -73,7 +73,7 @@ class FedNLLS(MethodBase):
             x=x_new,
             h_local=state.h_local + self.alpha * s_i,
             h_global=state.h_global + self.alpha * self._server_aggregate(
-                payloads, diff.shape[1:]),
+                payloads, hesses.shape[1:]),
             key=key,
             step=state.step + 1,
         )

@@ -93,8 +93,8 @@ class FedNLPP(MethodBase):
         hess_new = self.hess_fn(x_new)                         # hess_i(w_i^{k+1}=x^{k+1})
         grads_new = self.grad_fn(x_new)
 
-        diff = hess_new - state.h_local
-        payloads = self._uplink_payloads(diff, silo_keys)
+        payloads, _ = self._uplink_diff_payloads(hess_new, state.h_local,
+                                                silo_keys)
         s_i = self._local_hessians(payloads, (d, d))
         h_upd = state.h_local + self.alpha * s_i
         l_upd = jax.vmap(frob_norm)(h_upd - hess_new)

@@ -95,6 +95,24 @@ class MethodBase:
         axis; payload shapes are static)."""
         return jax.vmap(self.comp.compress)(diff, silo_keys)
 
+    def _uplink_diff_payloads(self, h_new, h_old, silo_keys):
+        """Device side, fused: payloads of D_i = h_new_i - h_old_i plus
+        l_i = ||D_i||_F, both from one pass. Compressors exposing
+        ``fused_diff_payloads`` (the block-sparse family) diff, select,
+        and emit tile-wise inside a single kernel — the dense (n, d, d)
+        difference never round-trips through HBM on the Pallas path;
+        everyone else falls back to compress(h_new - h_old). Callers
+        that don't need the norms leave them dead (XLA DCE removes the
+        reduction)."""
+        fused = getattr(self.comp, "fused_diff_payloads", None)
+        if fused is not None:
+            return fused(h_new, h_old)
+        from ..core.linalg import frob_norm
+
+        diff = h_new - h_old
+        return (jax.vmap(self.comp.compress)(diff, silo_keys),
+                jax.vmap(frob_norm)(diff))
+
     def _local_hessians(self, payloads, shape):
         """Device side: each silo reconstructs its OWN dense S_i from
         the payload it just built — the H_i^{k+1} = H_i^k + alpha S_i^k

@@ -1,12 +1,20 @@
-from .ops import block_topk, block_topk_payload
-from .ref import block_topk_payload_ref, block_topk_ref, payload_to_dense
+from .ops import block_topk, block_topk_payload, diff_topk_payload
+from .ref import (
+    block_topk_payload_ref,
+    block_topk_ref,
+    diff_topk_payload_ref,
+    payload_to_dense,
+)
 
 
 def analysis_targets():
     """Representative traced configs for the static-analysis sweep
     (``repro.analysis``): name -> lazy ClosedJaxpr + rule context. The
     Pallas body is forced (use_pallas/interpret) so the kernel is in
-    the jaxpr on any backend — tracing never executes it."""
+    the jaxpr on any backend — tracing never executes it. The fused
+    diff->top-k target additionally carries ``dense_forbidden``: the
+    no-dense-roundtrip rule then proves the dense (d, d) difference is
+    absent from the fused uplink jaxpr outside kernel bodies."""
     import jax
     import jax.numpy as jnp
 
@@ -26,5 +34,13 @@ def analysis_targets():
                                              use_pallas=True,
                                              interpret=True))(x),
             "context": {"block": 128},
+        },
+        {
+            "name": "diff_topk_payload[512x512,k=32,b=128,fused]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda a, b: diff_topk_payload(a, b, k=32, block=128,
+                                               use_pallas=True,
+                                               interpret=True))(x, x),
+            "context": {"block": 128, "dense_forbidden": (512, 512)},
         },
     ]

@@ -103,9 +103,11 @@ def _flat_positions(mask: jax.Array) -> jax.Array:
     return row_offset + incl - mask                 # (b0, b1)
 
 
-def _topk_payload_tile_kernel(x_ref, vals_ref, idx_ref, *, k: int,
-                              iters: int = 32):
-    x = x_ref[...]                                  # (b0, b1)
+def _emit_topk_payload(x, vals_ref, idx_ref, *, k: int, iters: int = 32):
+    """Shared payload-emission body: select the k largest-magnitude
+    entries of the in-VMEM tile ``x`` and write the (1, k) value/index
+    payload rows — used by both the plain top-k kernel and the fused
+    diff->top-k kernel."""
     b0, b1 = x.shape
     ax = jnp.abs(x).astype(jnp.float32)
 
@@ -148,6 +150,24 @@ def _topk_payload_tile_kernel(x_ref, vals_ref, idx_ref, *, k: int,
     idx_ref[...] = jnp.where(filled, ids, -1.0).astype(jnp.int32)
 
 
+def _topk_payload_tile_kernel(x_ref, vals_ref, idx_ref, *, k: int,
+                              iters: int = 32):
+    _emit_topk_payload(x_ref[...], vals_ref, idx_ref, k=k, iters=iters)
+
+
+def _diff_topk_payload_tile_kernel(a_ref, b_ref, vals_ref, idx_ref, sq_ref,
+                                   *, k: int, iters: int = 32):
+    """Fused uplink tile: D = a - b is formed IN VMEM, its squared
+    Frobenius partial written to the per-tile scalar cell, and its
+    top-k payload emitted — the dense (d, d) difference never exists in
+    HBM."""
+    x = a_ref[...] - b_ref[...]                     # (b0, b1), VMEM only
+    acc = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+    xa = x.astype(acc)
+    sq_ref[0, 0] = jnp.sum(xa * xa).astype(sq_ref.dtype)
+    _emit_topk_payload(x, vals_ref, idx_ref, k=k, iters=iters)
+
+
 def block_topk_payload_kernel(x: jax.Array, k: int, block: int = 128,
                               interpret: bool = False):
     """Payload-emitting variant: x (M, N) with M, N multiples of
@@ -172,3 +192,36 @@ def block_topk_payload_kernel(x: jax.Array, k: int, block: int = 128,
         interpret=interpret,
     )(x)
     return vals, idx
+
+
+def diff_topk_payload_kernel(a: jax.Array, b: jax.Array, k: int,
+                             block: int = 128, interpret: bool = False):
+    """Fused diff->top-k->payload: a, b (M, N) with M, N multiples of
+    ``block`` (ops.py pads); per tile computes D = a - b in VMEM,
+    selects its top-k, and emits (values, indices) of shape
+    (nblocks, k) plus the per-tile squared Frobenius partials
+    (nblocks, 1) — summing them gives ||D||_F^2 for free (the l_i
+    FedNL ships with each payload). The dense difference never
+    round-trips through HBM."""
+    m, n = a.shape
+    gm, gn = m // block, n // block
+    grid = (gm, gn)
+    tile = pl.BlockSpec((block, block), lambda i, j: (i, j))
+    row = pl.BlockSpec((1, k), lambda i, j: (i * gn + j, 0))
+    acc = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
+    vals, idx, sq = pl.pallas_call(
+        functools.partial(_diff_topk_payload_tile_kernel, k=k),
+        grid=grid,
+        in_specs=[tile, tile],
+        out_specs=(
+            row, row,
+            pl.BlockSpec((1, 1), lambda i, j: (i * gn + j, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((gm * gn, k), a.dtype),
+            jax.ShapeDtypeStruct((gm * gn, k), jnp.int32),
+            jax.ShapeDtypeStruct((gm * gn, 1), acc),
+        ),
+        interpret=interpret,
+    )(a, b)
+    return vals, idx, sq

@@ -40,6 +40,19 @@ def block_topk_payload_ref(x: jax.Array, k: int, block: int = 128):
     return vals, idx.astype(jnp.int32)
 
 
+def diff_topk_payload_ref(a: jax.Array, b: jax.Array, k: int,
+                          block: int = 128):
+    """Unfused oracle of the fused uplink: form D = a - b dense, take
+    its block payload, and return (values, indices, per-tile squared
+    Frobenius partials) in the kernel's layout."""
+    d = a - b
+    vals, idx = block_topk_payload_ref(d, k=k, block=block)
+    acc = jnp.float64 if d.dtype == jnp.float64 else jnp.float32
+    da = _tiles(d, block).astype(acc)
+    sq = jnp.sum(da * da, axis=1, keepdims=True)
+    return vals, idx, sq
+
+
 def payload_to_dense(vals: jax.Array, idx: jax.Array, shape,
                      block: int = 128) -> jax.Array:
     """Reconstruct the dense compressed matrix from a (values, indices)

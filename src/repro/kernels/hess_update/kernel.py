@@ -31,8 +31,18 @@ def _hess_update_kernel(h_ref, d_ref, s_ref, o_ref, err_ref, *, alpha: float):
 
 def hess_update_kernel(h: jax.Array, d: jax.Array, s: jax.Array, alpha: float,
                        block: int = 128, interpret: bool = False):
+    """Any (m, n): edge tiles are zero-padded to the block grid here
+    (the grid used to be ``m // block`` which silently DROPPED non-
+    multiple edges), then cropped from the output — the padding is zero
+    in h, d, and s alike, so its diff contributes exactly 0 to the
+    error partials and nothing to the cropped update."""
     m, n = h.shape
-    grid = (m // block, n // block)
+    pm, pn = (-m) % block, (-n) % block
+    if pm or pn:
+        pad = lambda x: jnp.pad(x, ((0, pm), (0, pn)))
+        h, d, s = pad(h), pad(d), pad(s)
+    mp, np_ = h.shape
+    grid = (mp // block, np_ // block)
     tile = pl.BlockSpec((block, block), lambda i, j: (i, j))
     out, err = pl.pallas_call(
         functools.partial(_hess_update_kernel, alpha=alpha),
@@ -45,4 +55,6 @@ def hess_update_kernel(h: jax.Array, d: jax.Array, s: jax.Array, alpha: float,
         ],
         interpret=interpret,
     )(h, d, s)
+    if pm or pn:
+        out = out[:m, :n]
     return out, err

@@ -5,24 +5,29 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..tuning import lookup
 from .kernel import hess_update_kernel
 
 
-@partial(jax.jit, static_argnames=("alpha", "block", "interpret"))
 def hess_update(h: jax.Array, d: jax.Array, s: jax.Array, alpha: float,
-                block: int = 128, interpret: bool | None = None):
-    """Returns (H + alpha*S, ||H - D||_F). Pads to block multiples."""
+                block: int | None = None, interpret: bool | None = None):
+    """Returns (H + alpha*S, ||H - D||_F) in one fused pass. Any (m, n)
+    — edge tiles are padded/masked in the kernel wrapper. ``block``
+    resolution: explicit argument > tuned winner
+    (``repro.kernels.tuning``, keyed on (d-bucket, dtype, device)) >
+    the untuned 128 default; resolved here in plain Python so a warmed
+    cache applies at the next trace."""
+    if block is None:
+        cfg = lookup("hess_update", shape=h.shape, dtype=h.dtype)
+        block = cfg.block if cfg is not None and cfg.block else 128
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    m, n = h.shape
-    pm, pn = (-m) % block, (-n) % block
-    if pm or pn:
-        pad = lambda x: jnp.pad(x, ((0, pm), (0, pn)))
-        h_p, d_p, s_p = pad(h), pad(d), pad(s)
-    else:
-        h_p, d_p, s_p = h, d, s
-    out, err = hess_update_kernel(h_p, d_p, s_p, alpha, block=block,
+    return _hess_update_impl(h, d, s, alpha, block=int(block),
+                             interpret=bool(interpret))
+
+
+@partial(jax.jit, static_argnames=("alpha", "block", "interpret"))
+def _hess_update_impl(h, d, s, alpha: float, block: int, interpret: bool):
+    out, err = hess_update_kernel(h, d, s, alpha, block=block,
                                   interpret=interpret)
-    if pm or pn:
-        out = out[:m, :n]
     return out, jnp.sqrt(jnp.sum(err))

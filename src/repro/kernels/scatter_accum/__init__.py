@@ -37,6 +37,14 @@ def analysis_targets():
             "context": {},
         },
         {
+            "name": "scatter_accumulate[1024x1024,symmetric-fused]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda v, i: scatter_accumulate(
+                    v, i, (1024, 1024), use_pallas=True,
+                    interpret=True, symmetric=True))(v_s, i_s),
+            "context": {},
+        },
+        {
             "name": "block_scatter_accumulate[4x4 grid,b=128]",
             "trace": lambda: jax.make_jaxpr(
                 lambda v, i: block_scatter_accumulate(

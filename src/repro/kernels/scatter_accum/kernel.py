@@ -64,7 +64,18 @@ def _onehot_contribution(vals, rows, cols, d0: int, d1: int, acc):
         preferred_element_type=acc)                     # (d0, d1)
 
 
-def _scatter_accum_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int):
+def _mirror_vals(vals, rows, cols):
+    """Values for the mirrored (col, row) contribution of a symmetric
+    scatter: diagonal entries (row == col) are zeroed so they land
+    exactly once — together with the direct contribution this fuses the
+    ``c + c.T - diag(diag(c))`` second pass into the kernel. Padding
+    (row = -1, col >= 0) never equals its col and keeps its value, but
+    its mirrored *column* index is negative and matches no one-hot."""
+    return jnp.where(rows == cols, jnp.zeros_like(vals), vals)
+
+
+def _scatter_accum_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int,
+                               symmetric: bool = False):
     """One (value, index) chunk of one silo; all programs revisit the
     same full-matrix out block. ``d1`` is the UNPADDED column count the
     flat indices were built against."""
@@ -81,19 +92,26 @@ def _scatter_accum_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int):
     cols = idx - rows * d1
     acc = _acc_dtype(vals.dtype)
     contrib = _onehot_contribution(vals, rows, cols, d0p, d1p, acc)
+    if symmetric:
+        contrib += _onehot_contribution(_mirror_vals(vals, rows, cols),
+                                        cols, rows, d0p, d1p, acc)
     out_ref[...] += contrib.astype(out_ref.dtype)
 
 
 def scatter_accum_kernel(values: jax.Array, indices: jax.Array,
                          out_shape, d1: int,
-                         interpret: bool = False) -> jax.Array:
+                         interpret: bool = False,
+                         symmetric: bool = False) -> jax.Array:
     """values/indices: (nchunks, ck) — silo payloads flattened into
     fixed-size chunks (ops.py pads with value 0 / index -1). Returns the
     (d0p, d1p) = ``out_shape`` dense SUM; ``d1`` is the unpadded column
-    count of the matrix the flat indices address."""
+    count of the matrix the flat indices address. ``symmetric`` adds
+    each off-diagonal entry's mirror in the same pass (lower-triangular
+    payloads: the fused symmetric-TopK server sum)."""
     nchunks, ck = values.shape
     return pl.pallas_call(
-        functools.partial(_scatter_accum_tile_kernel, d1=d1),
+        functools.partial(_scatter_accum_tile_kernel, d1=d1,
+                          symmetric=symmetric),
         grid=(nchunks,),
         in_specs=[
             pl.BlockSpec((1, ck), lambda i: (i, 0)),
@@ -105,7 +123,8 @@ def scatter_accum_kernel(values: jax.Array, indices: jax.Array,
     )(values, indices)
 
 
-def _scatter_accum_tiled_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int):
+def _scatter_accum_tiled_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int,
+                                     symmetric: bool = False):
     """One (row-tile, col-tile, chunk) program: contribute this chunk's
     in-window entries to the (tm, tn) output tile. The chunk axis is the
     innermost grid dim, so each output tile is revisited consecutively
@@ -130,24 +149,33 @@ def _scatter_accum_tiled_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int):
     acc = _acc_dtype(vals.dtype)
     contrib = _onehot_contribution(vals, rows - row0, cols - col0,
                                    tm, tn, acc)
+    if symmetric:
+        contrib += _onehot_contribution(_mirror_vals(vals, rows, cols),
+                                        cols - row0, rows - col0,
+                                        tm, tn, acc)
     out_ref[...] += contrib.astype(out_ref.dtype)
 
 
 def scatter_accum_tiled_kernel(values: jax.Array, indices: jax.Array,
                                out_shape, d1: int, tile,
-                               interpret: bool = False) -> jax.Array:
+                               interpret: bool = False,
+                               symmetric: bool = False) -> jax.Array:
     """Tiled variant of ``scatter_accum_kernel``: same (nchunks, ck)
     chunked pair stream, but the output is produced as a 2-D grid of
     (tm, tn) = ``tile`` blocks so VMEM holds one tile, not the matrix.
     ``out_shape`` must be a multiple of ``tile`` in both dims (ops.py
     pads); ``d1`` is the unpadded column count the flat indices address.
+    ``symmetric`` mirrors off-diagonal entries in the same pass — the
+    mirrored coordinates go through the identical tile-window test, so
+    each mirror lands in exactly the tile that owns it.
     """
     nchunks, ck = values.shape
     d0p, d1p = (int(s) for s in out_shape)
     tm, tn = (int(t) for t in tile)
     assert d0p % tm == 0 and d1p % tn == 0, (out_shape, tile)
     return pl.pallas_call(
-        functools.partial(_scatter_accum_tiled_tile_kernel, d1=d1),
+        functools.partial(_scatter_accum_tiled_tile_kernel, d1=d1,
+                          symmetric=symmetric),
         grid=(d0p // tm, d1p // tn, nchunks),
         in_specs=[
             pl.BlockSpec((1, ck), lambda i, j, c: (c, 0)),

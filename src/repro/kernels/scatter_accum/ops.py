@@ -9,7 +9,15 @@ ONE accumulator (the caller divides by n for the server mean):
 On TPU the Pallas kernels run; elsewhere the pure-jnp oracle (a single
 XLA scatter-add) IS the fast path — interpret-mode Pallas would emulate
 the kernel body at Python speed on the hot loop of every step. Tests
-force the kernel body with ``use_pallas=True, interpret=True``."""
+force the kernel body with ``use_pallas=True, interpret=True``.
+
+Config resolution (``tile``, ``chunk``) is explicit argument > tuned
+winner (``repro.kernels.tuning`` cache, keyed on (d-bucket, k, n,
+dtype, device kind)) > untuned default (``_TILE``/``_CHUNK`` with the
+VMEM-budget single-block-vs-tiled dispatch). Resolution happens in the
+plain-Python wrapper BEFORE the jitted impl, so a cache warmed between
+calls takes effect on the next trace instead of being baked forever at
+the first one."""
 
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import VMEM_BUDGET_BYTES
+from ..tuning import lookup
 from .kernel import (
     block_scatter_accum_kernel,
     scatter_accum_kernel,
@@ -26,7 +35,7 @@ from .kernel import (
 )
 from .ref import block_scatter_accumulate_ref, scatter_accumulate_ref
 
-_CHUNK = 512  # (value, index) pairs per kernel program
+_CHUNK = 512  # default (value, index) pairs per kernel program
 
 # Single-block vs tiled dispatch: the single-block kernel holds the
 # whole padded accumulator in ONE VMEM block, which is only legal while
@@ -43,12 +52,11 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-@partial(jax.jit, static_argnames=("shape", "use_pallas", "interpret",
-                                   "tile"))
 def scatter_accumulate(values: jax.Array, indices: jax.Array, shape,
                        use_pallas: bool | None = None,
                        interpret: bool | None = None,
-                       tile=None) -> jax.Array:
+                       tile=None, chunk: int | None = None,
+                       symmetric: bool = False) -> jax.Array:
     """Dense (d0, d1) SUM of n sparse silo payloads.
 
     values/indices: (n, k) per-silo (value, row-major flat index) pairs
@@ -58,17 +66,44 @@ def scatter_accumulate(values: jax.Array, indices: jax.Array, shape,
     and is otherwise tiled into (tm, tn) output blocks (the chunk pair
     stream replayed per tile) — any d stays in VMEM. ``tile`` forces
     the tiled kernel with that (tm, tn) block (tm a multiple of 8, tn
-    of 128); None means budget-dispatch with the default tile."""
+    of 128) and ``chunk`` the pair-stream chunk length; leaving BOTH
+    None consults the autotuner cache first, then budget-dispatches
+    with the defaults. ``symmetric`` treats each payload as the lower
+    triangle of a symmetric matrix and lands every off-diagonal entry
+    at (r, c) AND (c, r) in the same kernel pass — the fused
+    ``c + c.T - diag(diag(c))`` used by symmetric TopK aggregation."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:
-        return scatter_accumulate_ref(values, indices, shape)
+        return scatter_accumulate_ref(values, indices, shape,
+                                      symmetric=symmetric)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    d0, d1 = (int(s) for s in shape)
     n, k = values.shape
-    kp = _round_up(max(k, 1), _CHUNK) if k > _CHUNK else max(k, 1)
-    ck = min(kp, _CHUNK)
+    if tile is None and chunk is None:  # untuned call: cache decides
+        cfg = lookup("scatter_accumulate", shape=shape, k=k, n=n,
+                     dtype=values.dtype)
+        if cfg is not None:
+            tile, chunk = cfg.tile, cfg.chunk
+    if chunk is None:
+        chunk = _CHUNK
+    shape = tuple(int(s) for s in shape)
+    tile = (int(tile[0]), int(tile[1])) if tile is not None else None
+    return _scatter_accumulate_pallas(values, indices, shape,
+                                      interpret=bool(interpret), tile=tile,
+                                      chunk=int(chunk),
+                                      symmetric=bool(symmetric))
+
+
+@partial(jax.jit, static_argnames=("shape", "interpret", "tile", "chunk",
+                                   "symmetric"))
+def _scatter_accumulate_pallas(values, indices, shape, interpret: bool,
+                               tile, chunk: int,
+                               symmetric: bool) -> jax.Array:
+    d0, d1 = shape
+    n, k = values.shape
+    kp = _round_up(max(k, 1), chunk) if k > chunk else max(k, 1)
+    ck = min(kp, chunk)
     vals = jnp.pad(values, ((0, 0), (0, kp - k)))
     idx = jnp.pad(indices, ((0, 0), (0, kp - k)), constant_values=-1)
     # fixed-size chunks -> one grid program each, revisiting the output
@@ -78,17 +113,21 @@ def scatter_accumulate(values: jax.Array, indices: jax.Array, shape,
     acc_bytes = (_round_up(d0, 8) * _round_up(d1, 128)
                  * jnp.dtype(values.dtype).itemsize)
     if tile is None and acc_bytes > _VMEM_ACC_BUDGET_BYTES:
+        # over budget the single-block kernel is illegal no matter what
+        # a cache entry says — the budget guard outranks the tuner
         tile = _TILE
     if tile is None:
         d0p, d1p = _round_up(d0, 8), _round_up(d1, 128)
         out = scatter_accum_kernel(vals, idx, (d0p, d1p), d1,
-                                   interpret=interpret)
+                                   interpret=interpret,
+                                   symmetric=symmetric)
     else:
         tm = _round_up(int(tile[0]), 8)
         tn = _round_up(int(tile[1]), 128)
         d0p, d1p = _round_up(d0, tm), _round_up(d1, tn)
         out = scatter_accum_tiled_kernel(vals, idx, (d0p, d1p), d1,
-                                         (tm, tn), interpret=interpret)
+                                         (tm, tn), interpret=interpret,
+                                         symmetric=symmetric)
     return out[:d0, :d1]
 
 

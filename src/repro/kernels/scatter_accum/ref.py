@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 
 def scatter_accumulate_ref(values: jax.Array, indices: jax.Array,
-                           shape) -> jax.Array:
+                           shape, symmetric: bool = False) -> jax.Array:
     """Dense (d0, d1) SUM of n sparse silo payloads.
 
     values/indices: (n, k) — per-silo (value, global flat index) pairs,
@@ -19,13 +19,18 @@ def scatter_accumulate_ref(values: jax.Array, indices: jax.Array,
     padding) are dropped. Duplicate indices (across silos, or within
     one after ties) accumulate additively — exactly the server sum.
     Negative indices are remapped BEFORE the scatter (jax normalizes
-    them ahead of the mode="drop" bounds check)."""
+    them ahead of the mode="drop" bounds check). ``symmetric`` mirrors
+    lower-triangular payloads (``c + c.T - diag(diag(c))`` — the
+    two-pass oracle for the kernel's fused mirror)."""
     d0, d1 = (int(s) for s in shape)
     n_out = d0 * d1
     idx = jnp.where(indices < 0, n_out, indices).reshape(-1)
     flat = jnp.zeros((n_out,), values.dtype).at[idx].add(
         values.reshape(-1), mode="drop")
-    return flat.reshape(d0, d1)
+    out = flat.reshape(d0, d1)
+    if symmetric:
+        out = out + out.T - jnp.diag(jnp.diag(out))
+    return out
 
 
 def block_scatter_accumulate_ref(values: jax.Array, indices: jax.Array,

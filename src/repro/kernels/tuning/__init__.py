@@ -1,0 +1,118 @@
+"""Kernel autotuning: measured dispatch configs for the Pallas ops.
+
+``cache``  — the ``(op, d-bucket, k, n, dtype, device kind)`` ->
+             ``KernelConfig`` store (in-memory + persisted JSON,
+             ``$REPRO_TUNING_CACHE`` pins one for CI).
+``tuner``  — candidate generation (VMEM-budget filtered), roofline
+             pruning, wall-clock measurement, winner recording.
+
+The ops in ``scatter_accum``, ``block_topk``, and ``hess_update``
+consult ``lookup`` at trace time whenever the caller passes no explicit
+config: explicit argument > cached winner > untuned default.
+"""
+
+from .cache import (
+    CACHE_ENV,
+    KernelConfig,
+    TuningCache,
+    bucket,
+    cache_key,
+    device_kind,
+    get_cache,
+    lookup,
+    record,
+    set_cache,
+)
+from .tuner import (
+    autotune_block_topk_payload,
+    autotune_diff_topk_payload,
+    autotune_hess_update,
+    autotune_scatter_accumulate,
+    hess_candidates,
+    predict_scatter_us,
+    scatter_candidates,
+    time_us,
+)
+
+__all__ = [
+    "CACHE_ENV", "KernelConfig", "TuningCache", "bucket", "cache_key",
+    "device_kind", "get_cache", "lookup", "record", "set_cache",
+    "autotune_block_topk_payload", "autotune_diff_topk_payload",
+    "autotune_hess_update", "autotune_scatter_accumulate",
+    "hess_candidates", "predict_scatter_us", "scatter_candidates",
+    "time_us", "analysis_targets",
+]
+
+
+def _parse_key(key: str):
+    op, d_part, k_part, n_part, dtype, device = key.split("|")
+    dims = None if d_part == "d-" else tuple(
+        int(s) for s in d_part[1:].split("x"))
+    k = None if k_part == "k-" else int(k_part[1:])
+    n = None if n_part == "n-" else int(n_part[1:])
+    return op, dims, k, n, dtype, device
+
+
+def analysis_targets():
+    """Every *tuned* config currently in the active cache, traced at
+    its bucket shape so the vmem-budget rule prices the tuned
+    BlockSpecs — an autotuned (or hand-pinned) pick that would blow the
+    8 MiB budget fails the analysis sweep instead of OOMing on device.
+    With an empty cache the untuned defaults are traced instead, so the
+    package always contributes the pricing surface."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..block_topk import block_topk_payload
+    from ..hess_update import hess_update
+    from ..scatter_accum import scatter_accumulate
+
+    targets = []
+
+    def scatter_target(label, dims, k, n, dtype, tile, chunk):
+        v = jax.ShapeDtypeStruct((n, k), jnp.dtype(dtype))
+        i = jax.ShapeDtypeStruct((n, k), jnp.int32)
+        targets.append({
+            "name": f"scatter_accumulate[{label}]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda vv, ii: scatter_accumulate(
+                    vv, ii, dims, use_pallas=True, interpret=True,
+                    tile=tile, chunk=chunk or 512))(v, i),
+            "context": {},
+        })
+
+    entries = get_cache().entries()
+    for key in sorted(entries):
+        cfg = entries[key]
+        op, dims, k, n, dtype, _dev = _parse_key(key)
+        label = f"tuned:{key}"
+        if op == "scatter_accumulate" and dims and k and n:
+            scatter_target(label, dims, k, n, dtype, cfg.tile, cfg.chunk)
+        elif op == "hess_update" and dims:
+            m = jax.ShapeDtypeStruct(dims, jnp.dtype(dtype))
+            block = cfg.block or 128
+            targets.append({
+                "name": f"hess_update[{label}]",
+                "trace": lambda m=m, block=block: jax.make_jaxpr(
+                    lambda h, d, s: hess_update(h, d, s, 0.5, block=block,
+                                                interpret=True))(m, m, m),
+                "context": {"block": block},
+            })
+        elif op in ("block_topk_payload", "diff_topk_payload") and dims \
+                and k and n and cfg.use_pallas:
+            # only the Pallas branch has BlockSpecs to price
+            x = jax.ShapeDtypeStruct(dims, jnp.dtype(dtype))
+            targets.append({
+                "name": f"block_topk_payload[{label}]",
+                "trace": lambda x=x, k=k, n=n: jax.make_jaxpr(
+                    lambda m: block_topk_payload(
+                        m, k=k, block=n, use_pallas=True,
+                        interpret=True))(x),
+                "context": {"block": n},
+            })
+    if not targets:
+        scatter_target("default:single-block,c512", (512, 512), 512, 4,
+                       "float32", None, 512)
+        scatter_target("default:(512,512),c512", (4096, 4096), 2048, 4,
+                       "float32", (512, 512), 512)
+    return targets

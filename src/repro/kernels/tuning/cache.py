@@ -1,0 +1,179 @@
+"""Winner cache for the kernel autotuner.
+
+A tuned config is keyed on ``(op, d-bucket, k, n, dtype, device kind)``:
+
+  op           the dispatching op name ("scatter_accumulate",
+               "block_topk_payload", "diff_topk_payload", "hess_update")
+  d-bucket     the output/operand matrix shape with every dim rounded up
+               to the next power of two (min 8) — configs generalize
+               across nearby problem sizes instead of fragmenting the
+               cache per exact d
+  k            payload width per silo/tile (None where the op has none)
+  n            the op's second problem knob: silo count for the scatter,
+               tile block for the top-k family (None where meaningless)
+  dtype        canonical numpy dtype name of the values operand
+  device kind  ``jax.devices()[0].device_kind`` — a winner measured on
+               one generation never silently applies to another
+
+Keys serialize to one flat string, so the persisted JSON cache is a
+plain ``{key: config}`` object (plus a schema version) that can be
+committed and pinned in CI (``REPRO_TUNING_CACHE=path``). The in-memory
+cache is process-global: ops consult it at trace time through
+``repro.kernels.tuning.lookup`` and the tuner records winners through
+``record``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Optional
+
+_SCHEMA = 1
+
+# Env var naming a JSON cache to preload (the CI pin / pre-warm path).
+CACHE_ENV = "REPRO_TUNING_CACHE"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One tuned dispatch decision. Fields an op does not tune stay
+    None and the op's untuned default applies: ``tile=None`` on the
+    scatter means single-block (budget permitting), ``use_pallas=None``
+    means backend-default dispatch."""
+
+    tile: Optional[tuple] = None        # (tm, tn) output tile
+    chunk: Optional[int] = None         # pair-stream chunk length
+    block: Optional[int] = None         # square tile edge (hess_update)
+    use_pallas: Optional[bool] = None   # kernel-vs-oracle dispatch
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.tile is not None:
+            d["tile"] = list(self.tile)
+        return {k: v for k, v in d.items() if v is not None}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelConfig":
+        tile = d.get("tile")
+        return cls(
+            tile=tuple(int(t) for t in tile) if tile is not None else None,
+            chunk=int(d["chunk"]) if d.get("chunk") is not None else None,
+            block=int(d["block"]) if d.get("block") is not None else None,
+            use_pallas=d.get("use_pallas"),
+        )
+
+
+def bucket(x: int) -> int:
+    """Next power of two >= x (min 8): the d-bucket dimension."""
+    x = max(int(x), 8)
+    b = 8
+    while b < x:
+        b *= 2
+    return b
+
+
+def device_kind() -> str:
+    try:
+        import jax
+
+        return str(jax.devices()[0].device_kind).replace(" ", "_")
+    except Exception:  # noqa: BLE001 — no backend: still a usable key
+        return "unknown"
+
+
+def cache_key(op: str, shape=None, k=None, n=None, dtype=None,
+              device: Optional[str] = None) -> str:
+    """Deterministic flat key string; see module docstring for fields."""
+    if shape is None:
+        d_part = "-"
+    else:
+        d_part = "x".join(str(bucket(s)) for s in shape)
+    dt = "-" if dtype is None else str(__import__("numpy").dtype(dtype).name)
+    dev = device_kind() if device is None else device
+    return "|".join([op, f"d{d_part}",
+                     f"k{'-' if k is None else int(k)}",
+                     f"n{'-' if n is None else int(n)}", dt, dev])
+
+
+class TuningCache:
+    """Thread-safe key -> KernelConfig store with JSON persistence."""
+
+    def __init__(self, entries: Optional[dict] = None):
+        self._lock = threading.Lock()
+        self._entries: dict = dict(entries or {})
+
+    def get(self, key: str) -> Optional[KernelConfig]:
+        with self._lock:
+            return self._entries.get(key)
+
+    def put(self, key: str, cfg: KernelConfig) -> None:
+        with self._lock:
+            self._entries[key] = cfg
+
+    def entries(self) -> dict:
+        with self._lock:
+            return dict(self._entries)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def save(self, path: str) -> None:
+        doc = {"schema": _SCHEMA,
+               "configs": {k: v.to_dict() for k, v in self.entries().items()}}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "TuningCache":
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("schema") != _SCHEMA:
+            raise ValueError(
+                f"tuning cache {path!r}: schema {doc.get('schema')!r} != "
+                f"{_SCHEMA} — regenerate with the current tuner")
+        return cls({k: KernelConfig.from_dict(v)
+                    for k, v in doc.get("configs", {}).items()})
+
+
+_active: Optional[TuningCache] = None
+_active_lock = threading.Lock()
+
+
+def get_cache() -> TuningCache:
+    """The process-global cache; first use loads ``$REPRO_TUNING_CACHE``
+    when set (the CI pin), else starts empty (untuned defaults rule)."""
+    global _active
+    with _active_lock:
+        if _active is None:
+            path = os.environ.get(CACHE_ENV)
+            _active = TuningCache.load(path) if path and os.path.exists(path) \
+                else TuningCache()
+        return _active
+
+
+def set_cache(cache: Optional[TuningCache]) -> None:
+    """Swap the process-global cache (None resets to lazy env load) —
+    the test seam and the explicit pre-warm entry point."""
+    global _active
+    with _active_lock:
+        _active = cache
+
+
+def lookup(op: str, shape=None, k=None, n=None, dtype=None) -> \
+        Optional[KernelConfig]:
+    """Trace-time dispatch query: the tuned config for this op/problem
+    on this device, or None (untuned defaults apply)."""
+    return get_cache().get(cache_key(op, shape=shape, k=k, n=n, dtype=dtype))
+
+
+def record(op: str, cfg: KernelConfig, shape=None, k=None, n=None,
+           dtype=None) -> str:
+    """Store a winner in the process-global cache; returns its key."""
+    key = cache_key(op, shape=shape, k=k, n=n, dtype=dtype)
+    get_cache().put(key, cfg)
+    return key

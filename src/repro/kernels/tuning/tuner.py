@@ -1,0 +1,258 @@
+"""Measurement-driven autotuner for the Pallas dispatch constants.
+
+For each op a candidate list of ``KernelConfig``s is generated (every
+candidate's per-program VMEM footprint is checked against the shared
+``repro.kernels.VMEM_BUDGET_BYTES`` the same way the ``vmem-budget``
+analysis rule prices BlockSpecs — an autotuned pick can never trace
+past the budget), pruned to the most promising few by the
+``launch/roofline.py`` cost terms (max of compute time at PEAK_FLOPS
+and stream time at HBM_BW — the same max(compute, memory) model the
+roofline sweep uses), then each survivor is *measured*: median wall
+time over a few repetitions with ``block_until_ready``, compile
+excluded by a warmup call (the same protocol as ``benchmarks/common``).
+The winner is recorded in the process-global ``TuningCache`` (and can
+be persisted to JSON with ``cache.save``), after which the ops'
+dispatch wrappers pick it up for every *untuned* call with a matching
+``(op, d-bucket, k, n, dtype, device kind)`` key.
+
+Tuning happens eagerly (outside jit) — pre-warm the cache before
+tracing/jitting the training step, because jit bakes the dispatch
+decision at trace time.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .cache import KernelConfig, record
+
+# Candidate pools — the untuned defaults are always included, so the
+# tuner can only match or beat the status quo on the measured case.
+SCATTER_TILES = ((256, 256), (256, 512), (512, 512), (512, 1024),
+                 (1024, 512))
+SCATTER_CHUNKS = (256, 512, 1024)
+HESS_BLOCKS = (128, 256, 512)
+
+_INDEX_BYTES = 4  # int32 index streams
+
+
+def _budget() -> int:
+    from .. import VMEM_BUDGET_BYTES
+
+    return VMEM_BUDGET_BYTES
+
+
+def _roofline():
+    from ...launch.roofline import HBM_BW, PEAK_FLOPS
+
+    return float(PEAK_FLOPS), float(HBM_BW)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def time_us(fn: Callable[[], object], reps: int = 3,
+            warmup: int = 1) -> float:
+    """Median wall microseconds of ``fn()`` (jax outputs synced with
+    block_until_ready); ``warmup`` untimed calls absorb compilation."""
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _measure_winner(candidates: Sequence[KernelConfig],
+                    run: Callable[[KernelConfig], object],
+                    predict: Optional[Callable[[KernelConfig], float]],
+                    max_measured: int, reps: int,
+                    timer: Optional[Callable] = None):
+    """Prune ``candidates`` by the roofline prediction, measure the
+    survivors, return (winner, {config: us}). ``timer`` overrides the
+    wall-clock measurement (the deterministic test seam)."""
+    cands = list(candidates)
+    if not cands:
+        raise ValueError("no in-budget candidates to tune over")
+    if predict is not None and len(cands) > max_measured:
+        cands.sort(key=predict)
+        cands = cands[:max_measured]
+    timer = timer or (lambda fn: time_us(fn, reps=reps))
+    timings = {cfg: float(timer(lambda cfg=cfg: run(cfg))) for cfg in cands}
+    winner = min(cands, key=lambda c: timings[c])
+    return winner, timings
+
+
+# -- scatter_accumulate ------------------------------------------------------
+
+
+def scatter_candidates(shape, k: int, n: int, dtype) -> list:
+    """In-budget (tile, chunk) candidates for ``scatter_accumulate`` on
+    an (n, k) pair stream into ``shape``. Footprint per program =
+    value chunk + index chunk + one output block (exactly what the
+    vmem-budget rule sums from the BlockSpecs). ``tile=None`` is the
+    single-block kernel, included only while the whole padded
+    accumulator fits the budget — matching the untuned dispatch."""
+    d0, d1 = (int(s) for s in shape)
+    itemsize = np.dtype(dtype).itemsize
+    budget = _budget()
+    out = []
+    acc_bytes = _round_up(d0, 8) * _round_up(d1, 128) * itemsize
+    for chunk in SCATTER_CHUNKS:
+        ck = min(_round_up(max(k, 1), chunk) if k > chunk else max(k, 1),
+                 chunk)
+        stream = ck * (itemsize + _INDEX_BYTES)
+        if acc_bytes + stream <= budget:
+            out.append(KernelConfig(tile=None, chunk=chunk))
+        for tile in SCATTER_TILES:
+            tm, tn = _round_up(tile[0], 8), _round_up(tile[1], 128)
+            if tm > _round_up(d0, 8) and tn > _round_up(d1, 128):
+                continue  # bigger than the matrix: alias of single-block
+            if tm * tn * itemsize + stream <= budget:
+                out.append(KernelConfig(tile=(tm, tn), chunk=chunk))
+    return out
+
+
+def predict_scatter_us(cfg: KernelConfig, shape, k: int, n: int,
+                       dtype) -> float:
+    """Roofline estimate (us) for one tuned scatter config: every
+    (silo, chunk) pair is streamed once per output tile (the tiled
+    kernel's compute-for-memory trade), each visit paying two one-hot
+    matmuls — max(MXU time, HBM stream time) per the roofline model."""
+    peak_flops, hbm_bw = _roofline()
+    d0, d1 = (int(s) for s in shape)
+    itemsize = np.dtype(dtype).itemsize
+    chunk = cfg.chunk or 512
+    kp = _round_up(max(k, 1), chunk) if k > chunk else max(k, 1)
+    ck = min(kp, chunk)
+    nchunks = n * (kp // ck)
+    if cfg.tile is None:
+        tm, tn = _round_up(d0, 8), _round_up(d1, 128)
+    else:
+        tm, tn = cfg.tile
+    ntiles = _round_up(d0, tm) // tm * (_round_up(d1, tn) // tn)
+    flops = 2.0 * ck * tm * tn * nchunks * ntiles      # one-hot matmuls
+    bytes_ = (nchunks * ck * (itemsize + _INDEX_BYTES) * ntiles
+              + ntiles * tm * tn * itemsize)           # stream replay + out
+    return max(flops / peak_flops, bytes_ / hbm_bw) * 1e6
+
+
+def autotune_scatter_accumulate(values, indices, shape,
+                                use_pallas: Optional[bool] = None,
+                                interpret: Optional[bool] = None,
+                                max_measured: int = 4, reps: int = 3,
+                                timer: Optional[Callable] = None,
+                                record_winner: bool = True) -> KernelConfig:
+    """Measure in-budget (tile, chunk) candidates on this very operand
+    and record the winner for the ``(d-bucket, k, n, dtype)`` key."""
+    from ..scatter_accum import scatter_accumulate
+
+    n, k = values.shape
+    cands = scatter_candidates(shape, k, n, values.dtype)
+
+    def run(cfg: KernelConfig):
+        return scatter_accumulate(values, indices, tuple(shape),
+                                  use_pallas=use_pallas, interpret=interpret,
+                                  tile=cfg.tile, chunk=cfg.chunk)
+
+    winner, _ = _measure_winner(
+        cands, run, lambda c: predict_scatter_us(c, shape, k, n,
+                                                 values.dtype),
+        max_measured, reps, timer)
+    if record_winner:
+        record("scatter_accumulate", winner, shape=shape, k=k, n=n,
+               dtype=values.dtype)
+    return winner
+
+
+# -- hess_update -------------------------------------------------------------
+
+
+def hess_candidates(shape, dtype) -> list:
+    """In-budget square blocks for the fused Hessian update: five
+    (block, block) tiles resident per program (h, d, s, out + the error
+    cell)."""
+    itemsize = np.dtype(dtype).itemsize
+    budget = _budget()
+    out = []
+    for b in HESS_BLOCKS:
+        if 4 * b * b * itemsize + itemsize <= budget:
+            out.append(KernelConfig(block=b))
+    return out
+
+
+def autotune_hess_update(h, d, s, alpha: float,
+                         interpret: Optional[bool] = None,
+                         reps: int = 3, timer: Optional[Callable] = None,
+                         record_winner: bool = True) -> KernelConfig:
+    from ..hess_update import hess_update
+
+    cands = hess_candidates(h.shape, h.dtype)
+
+    def run(cfg: KernelConfig):
+        return hess_update(h, d, s, alpha, block=cfg.block,
+                           interpret=interpret)
+
+    # memory-bound in every config (the roofline terms are block-
+    # independent to first order): measure all, no pruning
+    winner, _ = _measure_winner(cands, run, None, len(cands), reps, timer)
+    if record_winner:
+        record("hess_update", winner, shape=h.shape, dtype=h.dtype)
+    return winner
+
+
+# -- block_topk_payload / diff_topk_payload ----------------------------------
+
+
+def _topk_candidates() -> list:
+    """The top-k family tunes the kernel-vs-oracle dispatch itself: on
+    some backends the Pallas body wins, on others the sort-based XLA
+    oracle does — measure instead of hardcoding the backend rule."""
+    return [KernelConfig(use_pallas=False), KernelConfig(use_pallas=True)]
+
+
+def autotune_block_topk_payload(x, k: int, block: int = 128,
+                                interpret: Optional[bool] = None,
+                                reps: int = 3,
+                                timer: Optional[Callable] = None,
+                                record_winner: bool = True) -> KernelConfig:
+    from ..block_topk import block_topk_payload
+
+    def run(cfg: KernelConfig):
+        return block_topk_payload(x, k=k, block=block,
+                                  use_pallas=cfg.use_pallas,
+                                  interpret=interpret)
+
+    winner, _ = _measure_winner(_topk_candidates(), run, None, 2, reps,
+                                timer)
+    if record_winner:
+        record("block_topk_payload", winner, shape=x.shape, k=k, n=block,
+               dtype=x.dtype)
+    return winner
+
+
+def autotune_diff_topk_payload(a, b, k: int, block: int = 128,
+                               interpret: Optional[bool] = None,
+                               reps: int = 3,
+                               timer: Optional[Callable] = None,
+                               record_winner: bool = True) -> KernelConfig:
+    from ..block_topk import diff_topk_payload
+
+    def run(cfg: KernelConfig):
+        return diff_topk_payload(a, b, k=k, block=block,
+                                 use_pallas=cfg.use_pallas,
+                                 interpret=interpret)
+
+    winner, _ = _measure_winner(_topk_candidates(), run, None, 2, reps,
+                                timer)
+    if record_winner:
+        record("diff_topk_payload", winner, shape=a.shape, k=k, n=block,
+               dtype=a.dtype)
+    return winner

@@ -24,10 +24,13 @@ data-parallel all-reduce is dense, so the compressed learning rule is
 applied to the aggregated D^k. The contraction argument (Lemma B.1 with
 y = aggregated observation) is unchanged; DESIGN.md §3 records this
 deviation. Both placements speak the payload wire format end to end:
-compression goes through the payload-emitting op
-(``kernels/block_topk.block_topk_payload`` — the Pallas kernel on TPU,
-the sort-based jnp oracle elsewhere) and the dense H increment is
-reconstructed through the payload-space scatter
+compression goes through the FUSED diff payload op
+(``kernels/block_topk.diff_topk_payload`` — the Pallas kernel on TPU,
+the sort-based jnp oracle elsewhere): D = obs - H is formed tile-wise
+in VMEM, selected, and emitted as payload arrays in one pass, with
+||D||_F^2 accumulated from the same tiles, so the dense difference
+never round-trips HBM and the l^k norm costs no extra reduction. The
+dense H increment is reconstructed through the payload-space scatter
 (``kernels/scatter_accum.block_scatter_accumulate``), so the training
 step materializes neither a dense (nblocks, block^2) selection mask nor
 a per-silo dense decompression round-trip. When ``observations`` carry
@@ -58,7 +61,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import BlockSparsePayload, BlockTopK, BlockTopKThreshold
-from repro.kernels.block_topk import block_topk_payload
+from repro.kernels.block_topk import block_topk_payload, diff_topk_payload
 
 from .optim import Optimizer
 
@@ -139,6 +142,14 @@ class FedNLPrecondOptimizer:
         return block_topk_payload(x2d, k=self._k(), block=self.block,
                                   use_pallas=self.use_pallas)
 
+    def _diff_payload(self, a2d: jax.Array, b2d: jax.Array):
+        """Fused diff -> select -> payload of D = a2d - b2d plus the
+        Frobenius sum-of-squares of D, one pass: on the Pallas path the
+        dense (d, d) difference lives only in VMEM tiles — it never
+        round-trips HBM — and ||D||_F comes free from the same tiles."""
+        return diff_topk_payload(a2d, b2d, k=self._k(), block=self.block,
+                                 use_pallas=self.use_pallas)
+
     def _payload_mean(self, vals: jax.Array, idx: jax.Array, shape2):
         """Dense mean of n stacked per-silo payloads through the one
         payload-space aggregation (``_BlockSparse.aggregate`` — the
@@ -155,30 +166,31 @@ class FedNLPrecondOptimizer:
         param.ndim + 1): then each silo's diff is compressed on-device
         and H learns from the payload-space server mean."""
 
-        def _rms(t):
-            return jnp.sqrt(jnp.mean(t * t) + 1e-30)
-
         obs = observations if observations is not None else self.observe(grads)
 
         def per_tensor(g, h, m, p, d_obs):
             g32 = g.astype(jnp.float32)
             h2 = _as2d(h)
             if d_obs.ndim == h.ndim + 1:
-                # cross-silo: per-silo payloads, ONE dense accumulator
-                diff_i = d_obs.astype(jnp.float32) - h[None]
-                diff2 = diff_i.reshape((diff_i.shape[0],) + h2.shape)
-                vals, idx = jax.vmap(self._compress_payload)(diff2)
+                # cross-silo: per-silo payloads, ONE dense accumulator.
+                # Each silo runs the fused diff kernel against the same
+                # shared H — the per-silo dense diff never materializes.
+                obs2 = d_obs.astype(jnp.float32).reshape(
+                    (d_obs.shape[0],) + h2.shape)
+                vals, idx, sq = jax.vmap(
+                    lambda a: self._diff_payload(a, h2))(obs2)
                 s = self._payload_mean(vals, idx, h2.shape).reshape(h.shape)
                 # l^k = mean_i ||D_i - H||_F, scale-matched (Option 2)
-                l = jnp.mean(jax.vmap(_rms)(diff_i))
+                l = jnp.mean(jnp.sqrt(sq / h.size + 1e-30))
             else:
-                diff = d_obs - h
-                # the uplink object is the payload; H learns from it
-                vals, idx = self._compress_payload(_as2d(diff))
+                # the uplink object is the payload; H learns from it.
+                # Fused: D = obs - H is formed tile-wise inside the
+                # payload kernel, and sq = ||D||_F^2 rides along.
+                vals, idx, sq = self._diff_payload(_as2d(d_obs), h2)
                 s = self._payload_mean(vals[None], idx[None],
                                        h2.shape).reshape(h.shape)
                 # l^k correction (Option 2), scale-matched to the diagonal
-                l = _rms(diff)
+                l = jnp.sqrt(sq / h.size + 1e-30)
             denom = jnp.sqrt(jnp.maximum(h, 0.0)) + jnp.sqrt(l) + self.eps
             step = g32 / denom
             if self.weight_decay:

@@ -432,3 +432,61 @@ def test_sweep_records_carry_entropy_column(problem):
         summ = res.summary()
         assert 0 < summ[0]["bits_per_round_entropy"] < \
             summ[0]["bits_per_round_measured"]
+
+
+# -- fused diff -> top-k -> payload uplink ------------------------------------
+
+
+class _UnfusedView:
+    """Proxy hiding ``fused_diff_payloads`` so MethodBase falls back to
+    the unfused compress(h_new - h_old) + frob_norm uplink."""
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def __getattr__(self, name):
+        if name == "fused_diff_payloads":
+            raise AttributeError(name)
+        return getattr(self._inner, name)
+
+
+def test_fused_diff_payloads_matches_unfused_compress():
+    """Compressor-level pin at f64: the fused device uplink (one-pass
+    diff -> select -> payload + ||D||_F) equals compressing the
+    materialized diff, silo by silo."""
+    from repro.core.compressors import BlockTopK
+    from repro.core.linalg import frob_norm
+
+    with enable_x64():
+        comp = BlockTopK(k_per_block=9, block=8)
+        kh, ko = jax.random.split(jax.random.PRNGKey(21))
+        h_new = jax.random.normal(kh, (3, 16, 16), jnp.float64)
+        h_old = jax.random.normal(ko, (3, 16, 16), jnp.float64)
+        payloads, l = comp.fused_diff_payloads(h_new, h_old)
+        diff = h_new - h_old
+        ref_pay = jax.vmap(lambda m: comp.compress(m))(diff)
+        dec = lambda p: comp.decompress(p, (16, 16))
+        np.testing.assert_allclose(
+            np.asarray(jax.vmap(dec)(payloads)),
+            np.asarray(jax.vmap(dec)(ref_pay)), rtol=0, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(l),
+                                   np.asarray(jax.vmap(frob_norm)(diff)),
+                                   rtol=1e-12)
+
+
+def test_fednl_fused_uplink_run_matches_unfused(problem):
+    """Method-level pin: a FedNL run through the fused uplink
+    (``fused_diff_payloads``) tracks the unfused fallback trajectory to
+    f64 noise — the fusion changes scheduling, not numerics."""
+    from repro.core.compressors import BlockTopK
+
+    with enable_x64():
+        x0 = jnp.full((10,), 0.4, jnp.float64)
+        comp = BlockTopK(k_per_block=9, block=8)
+        runs = {}
+        for tag, c in [("fused", comp), ("unfused", _UnfusedView(comp))]:
+            alg = FedNL(problem["grad"], problem["hess"], c, option=2)
+            _, runs[tag] = alg.run(x0, problem["n"], 8)
+        np.testing.assert_allclose(np.asarray(runs["fused"]),
+                                   np.asarray(runs["unfused"]),
+                                   rtol=0, atol=1e-11)

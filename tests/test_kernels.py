@@ -417,3 +417,139 @@ def test_flash_kernel_matches_model_attention_path():
     out_flash = flash_attention(q, k, v)
     np.testing.assert_allclose(np.asarray(out_model), np.asarray(out_flash),
                                atol=3e-5, rtol=3e-5)
+
+
+# -- hess_update edge tiles (regression: grid used to floor-divide) -----------
+
+
+def test_hess_update_kernel_edge_tiles_not_dropped():
+    """Direct kernel call on a shape smaller than one block in the
+    column dim: the old ``grid = (m // block, n // block)`` produced an
+    EMPTY grid for (300, 123) and silently dropped every edge tile; the
+    kernel now pads to the block grid and crops."""
+    from repro.kernels.hess_update.kernel import hess_update_kernel
+
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    h = jax.random.normal(ks[0], (300, 123))
+    d = jax.random.normal(ks[1], (300, 123))
+    s = jax.random.normal(ks[2], (300, 123))
+    out, err = hess_update_kernel(h, d, s, 0.7, block=128, interpret=True)
+    ref_out, ref_l = hess_update_ref(h, d, s, alpha=0.7)
+    assert out.shape == (300, 123)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=1e-6, rtol=1e-6)
+    # zero padding contributes exactly 0 to the error partials
+    np.testing.assert_allclose(float(jnp.sqrt(jnp.sum(err))), float(ref_l),
+                               rtol=1e-6)
+    # the edge rows/cols are real data, not zeros
+    assert float(jnp.abs(out[256:, :]).sum()) > 0
+    assert float(jnp.abs(out[:, 120:]).sum()) > 0
+
+
+# -- fused diff -> top-k -> payload -------------------------------------------
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_diff_topk_payload_fused_matches_unfused_f64(use_pallas):
+    """Equivalence pin at f64: the fused kernel's payload equals the
+    unfused ``block_topk_payload(a - b)`` on the same backend, and its
+    sumsq equals ``sum((a - b)**2)``. Zero accuracy change is the
+    acceptance bar for the fusion."""
+    from jax.experimental import enable_x64
+
+    from repro.kernels.block_topk import diff_topk_payload
+
+    with enable_x64():
+        ka, kb = jax.random.split(jax.random.PRNGKey(11))
+        a = jax.random.normal(ka, (256, 256), jnp.float64)
+        b = jax.random.normal(kb, (256, 256), jnp.float64)
+        vals, idx, sq = diff_topk_payload(a, b, k=32, block=128,
+                                          use_pallas=use_pallas,
+                                          interpret=True)
+        uv, ui = block_topk_payload(a - b, k=32, block=128,
+                                    use_pallas=use_pallas, interpret=True)
+        assert vals.dtype == jnp.float64
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ui))
+        np.testing.assert_allclose(np.asarray(vals), np.asarray(uv),
+                                   rtol=1e-15, atol=0)
+        # the free norm: per-tile partials vs the dense reduction
+        np.testing.assert_allclose(float(sq), float(jnp.sum((a - b) ** 2)),
+                                   rtol=1e-12)
+
+
+def test_diff_topk_payload_dispatch_oracle_matches_kernel():
+    """The two backends of the fused op (Pallas body vs sort-based jnp
+    oracle) agree on tie-free data: same dense reconstruction, same
+    sumsq."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(12))
+    a = jax.random.normal(ka, (300, 123))
+    b = jax.random.normal(kb, (300, 123))
+    from repro.kernels.block_topk import diff_topk_payload
+
+    kv, ki, ksq = diff_topk_payload(a, b, k=48, block=128, use_pallas=True,
+                                    interpret=True)
+    ov, oi, osq = diff_topk_payload(a, b, k=48, block=128, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(oi))
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(ov))
+    np.testing.assert_allclose(float(ksq), float(osq), rtol=1e-6)
+    # padding tiles contribute zero: sumsq is the UNPADDED diff norm
+    np.testing.assert_allclose(float(ksq),
+                               float(jnp.sum((a - b) ** 2)), rtol=1e-6)
+
+
+def test_diff_topk_payload_mixed_dtype_promotes():
+    """result_type promotion matches the semantics of ``a - b``."""
+    from repro.kernels.block_topk import diff_topk_payload
+
+    a = jax.random.normal(jax.random.PRNGKey(1), (128, 128), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (128, 128)).astype(
+        jnp.bfloat16)
+    vals, idx, sq = diff_topk_payload(a, b, k=8, block=128,
+                                      use_pallas=False)
+    assert vals.dtype == (a - b).dtype
+
+
+# -- symmetric mirror fused into the scatter ----------------------------------
+
+
+@pytest.mark.parametrize("tile", SCATTER_PATHS)
+def test_scatter_accum_symmetric_fused_matches_two_pass_f64(tile):
+    """The in-kernel mirror (every off-diagonal (r, c) also lands at
+    (c, r)) equals the two-pass oracle ``c + c.T - diag(diag(c))`` at
+    f64 — on both the single-block and tiled kernels, with -1 payload
+    padding present."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        d = 64
+        ks = jax.random.split(jax.random.PRNGKey(13), 3)
+        r = jax.random.randint(ks[0], (3, 40), 0, d)
+        c = jax.random.randint(ks[1], (3, 40), 0, d)
+        rows, cols = jnp.maximum(r, c), jnp.minimum(r, c)  # lower triangle
+        idx = (rows * d + cols).astype(jnp.int32)
+        idx = idx.at[:, -5:].set(-1)  # payload padding must stay inert
+        vals = jax.random.normal(ks[2], (3, 40), jnp.float64)
+        out = scatter_accumulate(vals, idx, (d, d), use_pallas=True,
+                                 interpret=True, tile=tile, symmetric=True)
+        base = scatter_accumulate_ref(vals, idx, (d, d))
+        expect = base + base.T - jnp.diag(jnp.diag(base))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-12, atol=1e-12)
+        # the jnp dispatch path agrees exactly
+        ref = scatter_accumulate(vals, idx, (d, d), use_pallas=False,
+                                 symmetric=True)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(expect))
+
+
+def test_scatter_accum_symmetric_diagonal_not_doubled():
+    """A payload of diagonal entries only: the fused mirror must leave
+    the diagonal single-counted (mirror contribution masked at r==c)."""
+    d = 16
+    diag_idx = (jnp.arange(8) * d + jnp.arange(8)).astype(jnp.int32)
+    vals = jnp.arange(1.0, 9.0)[None, :]
+    out = scatter_accumulate(vals, diag_idx[None, :], (d, d),
+                             use_pallas=True, interpret=True,
+                             symmetric=True)
+    plain = scatter_accumulate(vals, diag_idx[None, :], (d, d),
+                               use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(plain))

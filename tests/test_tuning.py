@@ -1,0 +1,318 @@
+"""Kernel autotuner: cache keying/persistence, dispatch authority
+(explicit argument > tuned winner > untuned default), measurement seam
+determinism, and the VMEM-budget pricing of tuned configs."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.framework import Target, get_rule
+from repro.kernels import VMEM_BUDGET_BYTES
+from repro.kernels.scatter_accum import scatter_accumulate, scatter_accumulate_ref
+from repro.kernels.tuning import (
+    CACHE_ENV,
+    KernelConfig,
+    TuningCache,
+    autotune_scatter_accumulate,
+    bucket,
+    cache_key,
+    get_cache,
+    lookup,
+    record,
+    scatter_candidates,
+    set_cache,
+)
+from repro.kernels.tuning import analysis_targets as tuning_targets
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    """Each test runs against its own empty process-global cache; reset
+    to lazy env-load afterwards so other test modules see a clean
+    state."""
+    set_cache(TuningCache())
+    yield
+    set_cache(None)
+
+
+def _pairs(shape, k, n, seed=0):
+    kv, ki = jax.random.split(jax.random.PRNGKey(seed))
+    vals = jax.random.normal(kv, (n, k))
+    idx = jax.random.randint(ki, (n, k), 0, shape[0] * shape[1])
+    return vals, idx.astype(jnp.int32)
+
+
+# -- cache keys ---------------------------------------------------------------
+
+
+def test_bucket_next_pow2_min8():
+    assert [bucket(x) for x in (1, 8, 9, 128, 300, 4096)] == \
+        [8, 8, 16, 128, 512, 4096]
+
+
+def test_cache_key_deterministic_and_bucketed():
+    a = cache_key("scatter_accumulate", shape=(300, 300), k=64, n=4,
+                  dtype=jnp.float32)
+    b = cache_key("scatter_accumulate", shape=(500, 400), k=64, n=4,
+                  dtype=jnp.float32)
+    assert a == b  # both dims bucket to 512 — one entry serves nearby d
+    assert a == cache_key("scatter_accumulate", shape=(300, 300), k=64,
+                          n=4, dtype=jnp.float32)
+    assert a != cache_key("scatter_accumulate", shape=(300, 300), k=65,
+                          n=4, dtype=jnp.float32)
+    assert a != cache_key("scatter_accumulate", shape=(300, 300), k=64,
+                          n=4, dtype=jnp.float64)
+    # every field is present in the flat string (the JSON cache is
+    # greppable by construction)
+    assert a.startswith("scatter_accumulate|d512x512|k64|n4|float32|")
+
+
+def test_lookup_miss_returns_none():
+    assert lookup("scatter_accumulate", shape=(64, 64), k=8, n=2,
+                  dtype=jnp.float32) is None
+
+
+def test_record_then_lookup_round_trip():
+    cfg = KernelConfig(tile=(256, 512), chunk=256)
+    record("scatter_accumulate", cfg, shape=(900, 900), k=128, n=8,
+           dtype=jnp.float32)
+    got = lookup("scatter_accumulate", shape=(1000, 600), k=128, n=8,
+                 dtype=jnp.float32)  # same (1024, 1024) bucket
+    assert got == cfg
+
+
+# -- JSON persistence ---------------------------------------------------------
+
+
+def test_cache_json_persistence_round_trip(tmp_path):
+    c = TuningCache()
+    k1 = cache_key("scatter_accumulate", shape=(512, 512), k=512, n=4,
+                   dtype=jnp.float32)
+    k2 = cache_key("hess_update", shape=(300, 123), dtype=jnp.bfloat16)
+    k3 = cache_key("diff_topk_payload", shape=(512, 512), k=32, n=128,
+                   dtype=jnp.float32)
+    c.put(k1, KernelConfig(tile=(256, 512), chunk=1024))
+    c.put(k2, KernelConfig(block=256))
+    c.put(k3, KernelConfig(use_pallas=True))
+    path = tmp_path / "cache.json"
+    c.save(str(path))
+    loaded = TuningCache.load(str(path))
+    assert loaded.entries() == c.entries()
+    # the persisted form is a plain {key: config} object + schema pin
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == 1
+    assert doc["configs"][k1] == {"tile": [256, 512], "chunk": 1024}
+
+
+def test_cache_schema_mismatch_raises(tmp_path):
+    path = tmp_path / "stale.json"
+    path.write_text(json.dumps({"schema": 99, "configs": {}}))
+    with pytest.raises(ValueError, match="schema"):
+        TuningCache.load(str(path))
+
+
+def test_env_pinned_cache_loads_lazily(tmp_path, monkeypatch):
+    c = TuningCache()
+    k1 = cache_key("scatter_accumulate", shape=(512, 512), k=512, n=4,
+                   dtype=jnp.float32)
+    c.put(k1, KernelConfig(tile=(512, 512), chunk=512))
+    path = tmp_path / "ci_pin.json"
+    c.save(str(path))
+    monkeypatch.setenv(CACHE_ENV, str(path))
+    set_cache(None)  # reset: next get_cache() performs the env load
+    assert get_cache().get(k1) == KernelConfig(tile=(512, 512), chunk=512)
+
+
+# -- dispatch authority -------------------------------------------------------
+
+
+def _trace_str(fn, *args):
+    return str(jax.make_jaxpr(fn)(*args))
+
+
+def test_dispatch_honors_cached_tile():
+    """An untuned call (no tile/chunk argument) must trace exactly like
+    the explicit-config call once the cache holds a winner, and
+    differently from the empty-cache default."""
+    shape = (64, 256)
+    vals, idx = _pairs(shape, k=32, n=3)
+
+    # fresh lambda per trace: jit caches on the function object, and the
+    # cache lookup lives in the plain wrapper the trace must re-run
+    def untuned():
+        return lambda v, i: scatter_accumulate(
+            v, i, shape, use_pallas=True, interpret=True)
+
+    explicit = lambda v, i: scatter_accumulate(
+        v, i, shape, use_pallas=True, interpret=True, tile=(8, 128),
+        chunk=256)
+    base = _trace_str(untuned(), vals, idx)  # empty cache: single-block
+    record("scatter_accumulate", KernelConfig(tile=(8, 128), chunk=256),
+           shape=shape, k=32, n=3, dtype=vals.dtype)
+    tuned = _trace_str(untuned(), vals, idx)
+    assert tuned == _trace_str(explicit, vals, idx)
+    assert tuned != base
+    # and the tuned path's numerics are the reference's, exactly
+    out = scatter_accumulate(vals, idx, shape, use_pallas=True,
+                             interpret=True)
+    ref = scatter_accumulate_ref(vals, idx, shape)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_explicit_override_beats_cache():
+    """The escape hatch: an explicit tile/chunk argument wins over a
+    cached winner (the cache is consulted only when BOTH are None)."""
+    shape = (64, 256)
+    vals, idx = _pairs(shape, k=32, n=3)
+    record("scatter_accumulate", KernelConfig(tile=(8, 128), chunk=256),
+           shape=shape, k=32, n=3, dtype=vals.dtype)
+    forced = lambda v, i: scatter_accumulate(
+        v, i, shape, use_pallas=True, interpret=True, tile=(16, 128),
+        chunk=512)
+    reference = lambda v, i: scatter_accumulate(
+        v, i, shape, use_pallas=True, interpret=True, tile=(16, 128),
+        chunk=512)
+    cached = lambda v, i: scatter_accumulate(
+        v, i, shape, use_pallas=True, interpret=True)
+    assert _trace_str(forced, vals, idx) == _trace_str(reference, vals, idx)
+    assert _trace_str(forced, vals, idx) != _trace_str(cached, vals, idx)
+
+
+def test_topk_dispatch_honors_cached_use_pallas():
+    """use_pallas=None on the top-k family resolves through the cache:
+    a recorded oracle winner must produce the oracle trace."""
+    from repro.kernels.block_topk import block_topk_payload
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    oracle = _trace_str(
+        lambda m: block_topk_payload(m, k=16, block=128, use_pallas=False), x)
+    record("block_topk_payload", KernelConfig(use_pallas=False),
+           shape=x.shape, k=16, n=128, dtype=x.dtype)
+    tuned = _trace_str(
+        lambda m: block_topk_payload(m, k=16, block=128), x)
+    assert tuned == oracle
+
+
+# -- the measurement loop -----------------------------------------------------
+
+
+def test_autotune_records_winner_deterministically():
+    """With the deterministic timer seam the tuner must pick the same
+    winner twice and leave it in the cache under the dispatch key."""
+    shape = (64, 256)
+    vals, idx = _pairs(shape, k=32, n=3)
+
+    def stub_timer(fn):  # never executes the kernel: pure selection test
+        stub_timer.calls += 1
+        return float(stub_timer.calls)  # first measured candidate wins
+
+    stub_timer.calls = 0
+    w1 = autotune_scatter_accumulate(vals, idx, shape, use_pallas=True,
+                                     interpret=True, timer=stub_timer)
+    stub_timer.calls = 0
+    w2 = autotune_scatter_accumulate(vals, idx, shape, use_pallas=True,
+                                     interpret=True, timer=stub_timer,
+                                     record_winner=False)
+    assert w1 == w2
+    assert lookup("scatter_accumulate", shape=shape, k=32, n=3,
+                  dtype=vals.dtype) == w1
+
+
+def test_autotune_winner_is_numerically_exact():
+    """Whatever config the tuner lands on, the op's numerics must equal
+    the untuned reference bit for bit (configs change scheduling, never
+    values)."""
+    shape = (64, 256)
+    vals, idx = _pairs(shape, k=32, n=3, seed=5)
+    autotune_scatter_accumulate(vals, idx, shape, use_pallas=True,
+                                interpret=True,
+                                timer=lambda fn: 1.0, max_measured=8)
+    out = scatter_accumulate(vals, idx, shape, use_pallas=True,
+                             interpret=True)
+    ref = scatter_accumulate_ref(vals, idx, shape)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# -- VMEM-budget pricing ------------------------------------------------------
+
+
+def _vmem_violations(jaxpr):
+    rule = get_rule("vmem-budget")
+    t = Target(name="test", kind="kernel", trace=lambda: None, rules=(),
+               context={})
+    return rule.check(jaxpr, t)
+
+
+def test_candidates_fit_vmem_budget_when_traced():
+    """Every candidate the generator emits must trace within the 8 MiB
+    budget the vmem-budget analysis rule enforces — the tuner can never
+    pick a config the analysis lane would reject."""
+    shape, k, n = (4096, 4096), 2048, 4
+    cands = scatter_candidates(shape, k, n, jnp.float32)
+    assert cands, "candidate pool must not be empty"
+    v = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    i = jax.ShapeDtypeStruct((n, k), jnp.int32)
+    for cfg in cands:
+        jaxpr = jax.make_jaxpr(lambda vv, ii, cfg=cfg: scatter_accumulate(
+            vv, ii, shape, use_pallas=True, interpret=True,
+            tile=cfg.tile, chunk=cfg.chunk or 512))(v, i)
+        assert _vmem_violations(jaxpr) == [], f"config {cfg} over budget"
+
+
+def test_single_block_candidate_gated_by_budget():
+    """tile=None (whole accumulator in one VMEM block) is only offered
+    while the padded accumulator fits the budget."""
+    small = scatter_candidates((512, 512), 512, 4, jnp.float32)
+    assert any(c.tile is None for c in small)
+    big = scatter_candidates((8192, 8192), 2048, 4, jnp.float32)
+    assert big and all(c.tile is not None for c in big)
+    acc = 8192 * 8192 * 4
+    assert acc > VMEM_BUDGET_BYTES  # the gate is real for this shape
+
+
+def test_budget_guard_outranks_cache():
+    """A (hand-pinned or stale) cache entry demanding the single-block
+    kernel on an over-budget shape must still dispatch tiled — the
+    budget guard wins over the tuner."""
+    shape = (8192, 8192)
+    record("scatter_accumulate", KernelConfig(tile=None, chunk=512),
+           shape=shape, k=64, n=2, dtype=jnp.float32)
+    v = jax.ShapeDtypeStruct((2, 64), jnp.float32)
+    i = jax.ShapeDtypeStruct((2, 64), jnp.int32)
+    jaxpr = jax.make_jaxpr(lambda vv, ii: scatter_accumulate(
+        vv, ii, shape, use_pallas=True, interpret=True))(v, i)
+    assert _vmem_violations(jaxpr) == []
+
+
+# -- analysis integration -----------------------------------------------------
+
+
+def test_tuning_analysis_targets_enumerate_cache():
+    """Each cached winner becomes a traced analysis target priced by the
+    vmem-budget rule; with an empty cache the defaults are traced."""
+    empty = tuning_targets()
+    assert empty and all("default" in t["name"] for t in empty)
+    record("scatter_accumulate", KernelConfig(tile=(256, 512), chunk=512),
+           shape=(4096, 4096), k=2048, n=4, dtype=jnp.float32)
+    record("hess_update", KernelConfig(block=256), shape=(512, 512),
+           dtype=jnp.float32)
+    record("diff_topk_payload", KernelConfig(use_pallas=True),
+           shape=(512, 512), k=32, n=128, dtype=jnp.float32)
+    targets = tuning_targets()
+    names = " ".join(t["name"] for t in targets)
+    assert "tuned:" in names and len(targets) == 3
+    for t in targets:
+        jaxpr = t["trace"]()  # must trace cleanly...
+        assert _vmem_violations(jaxpr) == []  # ...and price in budget
+
+
+def test_analyze_sweep_includes_tuning_package():
+    from repro.analysis.targets import analyze
+
+    results = analyze(kinds=["kernel"], targets=["tuning"])
+    assert results, "tuning package must contribute kernel targets"
+    for t, violations in results:
+        assert violations == [], f"{t.name}: {violations}"
