@@ -14,6 +14,8 @@ Four jaxpr-traced families plus one source-level family:
                           forced, trace-only)
   precond:update[...]     the fednl_precond training step on its pinned
                           TPU path (single-tensor and cross-silo)
+  train-step:fednl[...]   the FULL fednl train step (real reduced arch,
+                          curvature-observation phase, lax.cond refresh)
   source:<path>           every module under ``src/repro`` (AST rules)
 
 Everything is lazy: enumerating targets costs nothing; ``analyze``
@@ -209,6 +211,49 @@ def _precond_targets() -> Iterator[Target]:
                  trace=trace_silo, rules=rules, context=dict(ctx))
 
 
+def _train_step_targets() -> Iterator[Target]:
+    """The fednl train step END TO END on its pinned TPU payload path:
+    a reduced real architecture, the curvature-observation phase
+    (per-silo grads under lax.scan, fused diff payloads, payload-space
+    mean) behind the lax.cond refresh gate, and the preconditioned
+    update — trace-only, so the data-path invariants are mechanically
+    enforced on the exact graph ``launch/train.py`` compiles. Like the
+    precond targets this path is deliberately mixed-precision (f32
+    curvature state over bf16 params), so the dtype rule's f64 ban
+    still applies cleanly."""
+    from ..configs import get_config
+    from ..launch.steps import make_optimizer, make_train_step
+    from ..models import build_model
+
+    block, n_silos = 128, 2
+    rules = _JAXPR_RULES + ("no-dense-roundtrip", "dtype-discipline",
+                            "vmem-budget", "no-dense-silo-stack")
+
+    def one(name, hvp, curvature):
+        cfg = get_config("qwen2-0.5b", smoke=True)
+        model = build_model(cfg, use_remat=True)
+        opt = make_optimizer("fednl", 1e-3, k_per_block=32, block=block,
+                             curvature=curvature, use_pallas=True)
+        step = make_train_step(model, opt, refresh_every=4,
+                               n_silos=n_silos, hvp=hvp)
+
+        def trace():
+            b, t = 4, 32
+            params = jax.eval_shape(
+                model.init_params, jax.ShapeDtypeStruct((2,), jnp.uint32))
+            state = jax.eval_shape(opt.init, params)
+            batch = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32),
+                     "targets": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+            return jax.make_jaxpr(step)(params, state, batch)
+
+        ctx = {"block": block, "silo_axis": n_silos}
+        return Target(name=name, kind="train-step", trace=trace,
+                      rules=rules, context=ctx)
+
+    yield one("train-step:fednl[fisher]", False, "fisher")
+    yield one("train-step:fednl[hvp]", True, "hutchinson")
+
+
 def _source_targets() -> Iterator[Target]:
     root = pathlib.Path(__file__).resolve().parents[1]  # src/repro
     for path in sorted(root.rglob("*.py")):
@@ -225,6 +270,7 @@ _KIND_BUILDERS = {
     "aggregate": _aggregate_targets,
     "kernel": _kernel_targets,
     "precond": _precond_targets,
+    "train-step": _train_step_targets,
     "source": _source_targets,
 }
 

@@ -1,7 +1,8 @@
 """``python -m repro.launch.analyze`` — the static-analysis sweep.
 
 Traces every registered Method step, Compressor.aggregate path, Pallas
-kernel config, and the fednl_precond TPU path (plus an AST pass over
+kernel config, the fednl_precond TPU path, and the full fednl train
+step on a reduced real architecture (plus an AST pass over
 ``src/repro``) and checks the data-path invariants. Trace-only: runs on
 CPU CI in seconds, no accelerator needed. Nonzero exit on any
 violation — this is the CI gate.
@@ -31,7 +32,7 @@ def main(argv=None) -> int:
                          "(repeatable)")
     ap.add_argument("--kind", action="append", dest="kinds",
                     choices=["method-step", "aggregate", "kernel",
-                             "precond", "source"],
+                             "precond", "train-step", "source"],
                     help="only targets of this kind (repeatable)")
     ap.add_argument("--json", metavar="PATH",
                     help="also write the JSON report to PATH ('-' for "

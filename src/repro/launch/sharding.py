@@ -154,6 +154,35 @@ def make_layer_param_constrainer(mesh: Mesh, cfg: ModelConfig):
     return constrain
 
 
+def opt_state_shardings(state_shape: Any, params: Any, mesh: Mesh,
+                        cfg: ModelConfig):
+    """NamedShardings for an optimizer-state pytree (``jax.eval_shape``
+    of ``opt.init``): every state field that mirrors the params tree —
+    Adam moments, fednl's diagonal curvature H and its momentum — gets
+    the params' own ``param_spec`` shardings, so second-order state
+    scales with the param shards and never concentrates on one chip's
+    HBM. Fields with any other structure (step counters, the per-tensor
+    scalar ridge ``l``, empty ``()`` slots) are replicated."""
+    pspecs = tree_param_specs(params, mesh, cfg)
+    pdef = jax.tree.structure(params)
+    pshapes = [p.shape for p in jax.tree.leaves(params)]
+    rep = NamedSharding(mesh, P())
+
+    def field(sub):
+        try:
+            mirrors = (jax.tree.structure(sub) == pdef and
+                       [x.shape for x in jax.tree.leaves(sub)] == pshapes)
+        except Exception:
+            mirrors = False
+        if mirrors:
+            return pspecs
+        return jax.tree.map(lambda _: rep, sub)
+
+    if hasattr(state_shape, "_fields"):  # NamedTuple states
+        return type(state_shape)(*[field(f) for f in state_shape])
+    return field(state_shape)
+
+
 # ---------------------------------------------------------------------------
 # Activation hints (installed via models.common.set_activation_sharder)
 # ---------------------------------------------------------------------------

@@ -15,8 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import Model
-from repro.second_order import adamw, sgd
-from repro.second_order.fednl_precond import FedNLPrecondOptimizer
+from repro.second_order import adamw, fednl_precond, sgd
 from repro.second_order.optim import apply_updates
 
 
@@ -26,26 +25,79 @@ def make_optimizer(name: str, lr: float, moment_dtype=None, **kw):
     if name == "sgd":
         return sgd(lr, momentum=0.9)
     if name == "fednl":
-        opt = FedNLPrecondOptimizer(lr=lr, **kw)
-        from repro.second_order.optim import Optimizer
-
-        # bind update directly: the optional observations 4th arg (the
-        # cross-silo payload path) must survive the adapter
-        return Optimizer(opt.init, opt.update)
+        # the adapter binds update directly (the observations 4th arg —
+        # the cross-silo payload path — must survive) AND the amortized
+        # observe/refresh/precondition protocol that make_train_step's
+        # curvature phase drives.
+        return fednl_precond(lr, **kw)
     raise ValueError(name)
 
 
 def make_train_step(model: Model, optimizer, microbatches: int = 1,
-                    unroll_microbatches: bool = False):
+                    unroll_microbatches: bool = False,
+                    refresh_every: int = 1, n_silos: int = 1,
+                    hvp: bool = False, probe_seed: int = 0):
     """``microbatches > 1`` splits the global batch and accumulates grads
     with an inner scan — the remat residual stash then holds one
     microbatch's activations instead of the whole batch's (the difference
     between 51 GB and 6 GB per chip for grok-1 at train_4k).
     ``unroll_microbatches`` unrolls that scan so cost_analysis counts
-    every microbatch (dry-run probes only)."""
+    every microbatch (dry-run probes only).
+
+    Second-order optimizers (``optimizer.refresh`` is set — the fednl
+    path) get a curvature-observation phase: every ``refresh_every``
+    steps (a jittable ``lax.cond`` on the step counter, so the interval
+    costs nothing to the compiled graph on the other steps) the global
+    batch is split along its leading axis into ``n_silos`` shards — the
+    mesh data axis in the launch driver, so each data shard plays one
+    FedNL silo — and an inner scan computes one curvature observation
+    per silo (empirical-Fisher g^2, or a Hutchinson z*(Hz) probe via
+    one jvp-of-grad when ``hvp``). The silo-stacked observations flow
+    through ``optimizer.refresh`` (per-silo fused diff payloads +
+    payload-space server mean — the paper's uplink placement) and the
+    actual parameter update is ``optimizer.precondition`` from the
+    stored curvature: refresh cost is amortized, the per-step cost is
+    an elementwise diagonal solve. First-order optimizers ignore all
+    of this and take the plain ``update`` path."""
+
+    second_order = getattr(optimizer, "refresh", None) is not None \
+        and refresh_every >= 1
 
     def grads_of(params, batch):
         return jax.value_and_grad(model.loss_fn)(params, batch)
+
+    def observe_and_refresh(state, params, batch):
+        """One curvature refresh: scan over the silo shards of the
+        batch, one observation each, then learn H from the stack."""
+        sb = jax.tree.map(
+            lambda x: x.reshape((n_silos, x.shape[0] // n_silos)
+                                + x.shape[1:]), batch)
+
+        def silo_obs(carry, xs):
+            b_i, i = xs
+            if hvp:
+                # forward-over-reverse: primal out is the silo grad,
+                # tangent out is Hz — one pass buys both.
+                key = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.PRNGKey(probe_seed),
+                                       state.step), i)
+                leaves, treedef = jax.tree_util.tree_flatten(params)
+                keys = jax.random.split(key, len(leaves))
+                z = treedef.unflatten([
+                    jax.random.rademacher(k, p.shape, jnp.int8
+                                          ).astype(p.dtype)
+                    for k, p in zip(keys, leaves)])
+                gfn = lambda p: jax.grad(model.loss_fn)(p, b_i)
+                g_i, hz = jax.jvp(gfn, (params,), (z,))
+                obs = optimizer.observe(g_i, params, hvp=(z, hz))
+            else:
+                g_i = jax.grad(model.loss_fn)(params, b_i)
+                obs = optimizer.observe(g_i)
+            return carry, obs
+
+        _, obs = jax.lax.scan(silo_obs, 0,
+                              (sb, jnp.arange(n_silos, dtype=jnp.int32)))
+        return optimizer.refresh(state, obs)
 
     def train_step(params, opt_state, batch):
         if microbatches == 1:
@@ -71,14 +123,30 @@ def make_train_step(model: Model, optimizer, microbatches: int = 1,
             grads = jax.tree.map(
                 lambda g, p: (g / microbatches).astype(p.dtype), grads, params)
 
-        updates, opt_state = optimizer.update(grads, opt_state, params)
+        refreshed = jnp.zeros((), jnp.float32)
+        if second_order:
+            b0 = jax.tree.leaves(batch)[0].shape[0]
+            if b0 % n_silos:
+                raise ValueError(
+                    f"global batch {b0} must divide into n_silos={n_silos}")
+            do_refresh = (opt_state.step % refresh_every) == 0
+            opt_state = jax.lax.cond(
+                do_refresh,
+                lambda s: observe_and_refresh(s, params, batch),
+                lambda s: s, opt_state)
+            refreshed = do_refresh.astype(jnp.float32)
+            updates, opt_state = optimizer.precondition(
+                grads, opt_state, params)
+        else:
+            updates, opt_state = optimizer.update(grads, opt_state, params)
         params = apply_updates(params, updates)
         # NB: reduce per-leaf WITHOUT reshaping — flattening a 2D-sharded
         # tensor forces GSPMD to all-gather it (412 GB for grok-1's
         # stacked expert grads); jnp.sum over all axes partitions cleanly.
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                              for g in jax.tree.leaves(grads)))
-        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                   "curv_refreshed": refreshed}
 
     return train_step
 

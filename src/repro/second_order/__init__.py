@@ -1,2 +1,6 @@
-from .fednl_precond import FedNLPrecondOptimizer, fednl_precond
-from .optim import OptState, adamw, sgd
+from .fednl_precond import (
+    FedNLPrecondOptimizer,
+    FedNLPrecondState,
+    fednl_precond,
+)
+from .optim import Optimizer, OptState, adamw, apply_updates, sgd

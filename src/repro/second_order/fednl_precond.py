@@ -70,14 +70,26 @@ class FedNLPrecondState(NamedTuple):
     step: jax.Array
     h: Any            # per-tensor diagonal curvature estimates (fp32)
     mu: Any           # momentum on the preconditioned step
+    l: Any = ()       # per-tensor Option-2 ridge from the last refresh
+
+
+def _shape2d(shape) -> tuple:
+    """Block-partition layout of a tensor: collapse every leading axis
+    onto the rows so a stacked per-layer param (n_seg, din, dout) tiles
+    as (n_seg * din, dout) — each layer's rows land in their own block
+    rows instead of one long smeared row per segment."""
+    if len(shape) == 0:
+        return (1, 1)
+    if len(shape) == 1:
+        return (1, shape[0])
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    return (rows, shape[-1])
 
 
 def _as2d(x: jax.Array) -> jax.Array:
-    if x.ndim == 0:
-        return x.reshape(1, 1)
-    if x.ndim == 1:
-        return x.reshape(1, -1)
-    return x.reshape(x.shape[0], -1)
+    return x.reshape(_shape2d(x.shape))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +128,7 @@ class FedNLPrecondOptimizer:
             jnp.zeros((), jnp.int32),
             jax.tree.map(z32, params),
             jax.tree.map(z32, params),
+            jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params),
         )
 
     def observe(self, grads, params=None, hvp=None):
@@ -160,56 +173,123 @@ class FedNLPrecondOptimizer:
         return self.compressor.aggregate(payloads, tuple(shape2),
                                          use_pallas=self.use_pallas)
 
+    def _learn_tensor(self, h, d_obs):
+        """One tensor's compressed Hessian learning: the payload-space
+        increment s = C(D^k - H^k) (or the server mean of per-silo
+        payloads when ``d_obs`` carries a leading silo axis) plus the
+        scale-matched Option-2 ridge l^k. Returns (s, l)."""
+        h2 = _as2d(h)
+        if d_obs.ndim == h.ndim + 1:
+            # cross-silo: per-silo payloads, ONE dense accumulator.
+            # Each silo runs the fused diff kernel against the same
+            # shared H — the per-silo dense diff never materializes.
+            obs2 = d_obs.astype(jnp.float32).reshape(
+                (d_obs.shape[0],) + h2.shape)
+            vals, idx, sq = jax.vmap(
+                lambda a: self._diff_payload(a, h2))(obs2)
+            s = self._payload_mean(vals, idx, h2.shape).reshape(h.shape)
+            # l^k = mean_i ||D_i - H||_F, scale-matched (Option 2)
+            l = jnp.mean(jnp.sqrt(sq / h.size + 1e-30))
+        else:
+            # the uplink object is the payload; H learns from it.
+            # Fused: D = obs - H is formed tile-wise inside the
+            # payload kernel, and sq = ||D||_F^2 rides along.
+            vals, idx, sq = self._diff_payload(_as2d(d_obs), h2)
+            s = self._payload_mean(vals[None], idx[None],
+                                   h2.shape).reshape(h.shape)
+            # l^k correction (Option 2), scale-matched to the diagonal
+            l = jnp.sqrt(sq / h.size + 1e-30)
+        return s, l
+
+    def _precond_tensor(self, g, h, m, p, l):
+        """The cheap per-step preconditioned update from stored (h, l)."""
+        g32 = g.astype(jnp.float32)
+        denom = jnp.sqrt(jnp.maximum(h, 0.0)) + jnp.sqrt(l) + self.eps
+        step = g32 / denom
+        if self.weight_decay:
+            step = step + self.weight_decay * p.astype(jnp.float32)
+        m_new = self.momentum * m + step
+        u = (-self.lr * m_new).astype(p.dtype)
+        return u, m_new
+
+    @staticmethod
+    def _pick(out, i):
+        return jax.tree.map(lambda t: t[i], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+
+    def refresh(self, state: FedNLPrecondState, observations
+                ) -> FedNLPrecondState:
+        """Learn curvature from (possibly silo-stacked) observations —
+        the expensive, uplink-bearing phase. Updates ``h`` and the
+        stored ridge ``l``; ``step``/``mu`` are untouched, so the train
+        step can run this under ``lax.cond`` every ``refresh_every``
+        steps and ``precondition`` every step."""
+        out = jax.tree.map(self._learn_tensor, state.h, observations)
+        s, l = self._pick(out, 0), self._pick(out, 1)
+        h_new = jax.tree.map(lambda h, si: h + self.alpha * si, state.h, s)
+        return state._replace(h=h_new, l=l)
+
+    def precondition(self, grads, state: FedNLPrecondState, params):
+        """Preconditioned step from the curvature stored by the last
+        ``refresh`` (h AND its matching l — unlike legacy ``update``,
+        which blends the pre-learning h with the current obs l)."""
+        unset = isinstance(state.l, tuple) and len(state.l) == 0
+        l = jax.tree.map(lambda h: jnp.zeros((), jnp.float32),
+                         state.h) if unset else state.l
+        out = jax.tree.map(self._precond_tensor, grads, state.h, state.mu,
+                           params, l)
+        return self._pick(out, 0), state._replace(
+            step=state.step + 1, mu=self._pick(out, 1))
+
+    def uplink_bits(self, params, n_silos: int = 1) -> int:
+        """Host-side wire cost of ONE curvature refresh: every silo
+        ships one Block-TopK diff payload per parameter tensor
+        (``wire_cost`` analytic accounting — k values + k indices per
+        block on the 2D block partition). Call at setup time, not
+        inside the jitted step."""
+        from repro.wire import wire_cost
+
+        total = 0
+        for p in jax.tree.leaves(params):
+            rep = wire_cost(self.compressor, _shape2d(p.shape),
+                            encoded=False)
+            total += int(rep.analytic_bits)
+        return total * int(n_silos)
+
     def update(self, grads, state: FedNLPrecondState, params,
                observations=None):
         """``observations`` leaves may carry a leading silo axis (ndim ==
         param.ndim + 1): then each silo's diff is compressed on-device
-        and H learns from the payload-space server mean."""
+        and H learns from the payload-space server mean.
+
+        This is the fused learn-and-step path (curvature every step);
+        the amortized train-step path is ``refresh`` + ``precondition``.
+        Pinned semantics: the denominator uses the PRE-learning h with
+        the CURRENT observation's l."""
 
         obs = observations if observations is not None else self.observe(grads)
 
         def per_tensor(g, h, m, p, d_obs):
-            g32 = g.astype(jnp.float32)
-            h2 = _as2d(h)
-            if d_obs.ndim == h.ndim + 1:
-                # cross-silo: per-silo payloads, ONE dense accumulator.
-                # Each silo runs the fused diff kernel against the same
-                # shared H — the per-silo dense diff never materializes.
-                obs2 = d_obs.astype(jnp.float32).reshape(
-                    (d_obs.shape[0],) + h2.shape)
-                vals, idx, sq = jax.vmap(
-                    lambda a: self._diff_payload(a, h2))(obs2)
-                s = self._payload_mean(vals, idx, h2.shape).reshape(h.shape)
-                # l^k = mean_i ||D_i - H||_F, scale-matched (Option 2)
-                l = jnp.mean(jnp.sqrt(sq / h.size + 1e-30))
-            else:
-                # the uplink object is the payload; H learns from it.
-                # Fused: D = obs - H is formed tile-wise inside the
-                # payload kernel, and sq = ||D||_F^2 rides along.
-                vals, idx, sq = self._diff_payload(_as2d(d_obs), h2)
-                s = self._payload_mean(vals[None], idx[None],
-                                       h2.shape).reshape(h.shape)
-                # l^k correction (Option 2), scale-matched to the diagonal
-                l = jnp.sqrt(sq / h.size + 1e-30)
-            denom = jnp.sqrt(jnp.maximum(h, 0.0)) + jnp.sqrt(l) + self.eps
-            step = g32 / denom
-            if self.weight_decay:
-                step = step + self.weight_decay * p.astype(jnp.float32)
-            m_new = self.momentum * m + step
-            u = (-self.lr * m_new).astype(p.dtype)
+            s, l = self._learn_tensor(h, d_obs)
+            u, m_new = self._precond_tensor(g, h, m, p, l)
             h_new = h + self.alpha * s
-            return u, h_new, m_new
+            return u, h_new, m_new, l
 
         out = jax.tree.map(per_tensor, grads, state.h, state.mu, params, obs)
-        pick = lambda i: jax.tree.map(lambda t: t[i], out,
-                                      is_leaf=lambda t: isinstance(t, tuple))
-        return pick(0), FedNLPrecondState(state.step + 1, pick(1), pick(2))
+        return self._pick(out, 0), FedNLPrecondState(
+            state.step + 1, self._pick(out, 1), self._pick(out, 2),
+            self._pick(out, 3))
 
 
 def fednl_precond(lr: float = 1e-3, **kw) -> Optimizer:
     """Adapter matching the Optimizer(init, update) protocol. ``update``
     is bound directly (NOT wrapped in a 3-arg lambda) so the optional
     ``observations`` 4th argument — the cross-silo payload path —
-    reaches the optimizer through the protocol."""
+    reaches the optimizer through the protocol; the amortized
+    second-order hooks (observe / refresh / precondition) and the
+    host-side uplink accounting are bound alongside so
+    ``make_train_step`` can drive the refresh-interval path."""
     opt = FedNLPrecondOptimizer(lr=lr, **kw)
-    return Optimizer(opt.init, opt.update)
+    return Optimizer(opt.init, opt.update, observe=opt.observe,
+                     refresh=opt.refresh, precondition=opt.precondition,
+                     uplink_bits=opt.uplink_bits)

@@ -34,10 +34,28 @@ class Optimizer:
     curvature observations for optimizers that learn from them
     (``second_order/fednl_precond`` — a leading silo axis routes the
     cross-silo payload-aggregation path); first-order optimizers accept
-    and ignore it, and plain 3-arg calls keep working everywhere."""
+    and ignore it, and plain 3-arg calls keep working everywhere.
+
+    Second-order optimizers additionally expose the amortized protocol
+    (all three hooks or none — ``make_train_step`` keys on ``refresh``):
+
+      ``observe(grads, params=None, hvp=None) -> obs``  local curvature
+          observation D^k per tensor (no state touched);
+      ``refresh(state, observations) -> state``  learn curvature from
+          (possibly silo-stacked) observations — the expensive phase,
+          run every ``refresh_every`` steps under ``lax.cond``;
+      ``precondition(grads, state, params) -> (updates, state)``  the
+          cheap per-step preconditioned update from stored curvature.
+
+    ``uplink_bits(params, n_silos=1) -> int`` is host-side wire-cost
+    accounting for ONE refresh (what each silo ships), for logging."""
 
     init: Callable
     update: Callable
+    observe: Optional[Callable] = None
+    refresh: Optional[Callable] = None
+    precondition: Optional[Callable] = None
+    uplink_bits: Optional[Callable] = None
 
 
 def apply_updates(params, updates):

@@ -280,3 +280,19 @@ def test_full_registry_sweep_has_zero_violations():
     assert len(results) > 100  # the sweep actually enumerated the world
     failures = [(t.name, [str(v) for v in vs]) for t, vs in results if vs]
     assert failures == []
+
+
+def test_train_step_targets_registered():
+    """The full fednl train step (fisher AND hvp curvature) is a sweep
+    target, carrying every jaxpr data-path rule — so a regression in
+    ``make_train_step``'s observation phase fails the registry sweep,
+    not just the unit tests."""
+    targets = analysis.iter_targets(["train-step"])
+    names = {t.name for t in targets}
+    assert names == {"train-step:fednl[fisher]", "train-step:fednl[hvp]"}
+    for t in targets:
+        assert t.kind == "train-step"
+        for rule in ("no-dense-silo-stack", "no-dense-roundtrip",
+                     "dtype-discipline", "vmem-budget"):
+            assert rule in t.rules, (t.name, rule)
+        assert t.context["block"] == 128

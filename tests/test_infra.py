@@ -164,6 +164,47 @@ def test_fednl_precond_update_rule_matches_docstring():
     np.testing.assert_allclose(np.asarray(upd["w"]), want, rtol=1e-5)
 
 
+def test_fednl_precond_refresh_precondition_consistent_with_update():
+    """The amortized protocol pin: ``refresh`` learns exactly the H (and
+    ridge l) that ``update(..., observations=...)`` stores, while
+    touching nothing else — step and mu come back bit-identical — and
+    ``precondition`` on quiet steps reproduces ``update``'s no-obs step
+    from that stored state. This is the contract ``make_train_step``'s
+    lax.cond refresh gate relies on."""
+    opt = FedNLPrecondOptimizer(lr=0.1, alpha=0.5, momentum=0.9,
+                                k_per_block=16, block=8)
+    params = {"w": jnp.zeros((8, 8)), "b": jnp.zeros(5)}
+    grads = {"w": jnp.ones((8, 8)), "b": jnp.full(5, 2.0)}
+    obs = opt.observe(grads)
+
+    # the monolithic path: one update that both learns and steps
+    s0 = opt.init(params)
+    _, s_upd = opt.update(grads, s0, params, observations=obs)
+
+    # the amortized path: refresh (learn only), then precondition (step)
+    s_ref = opt.refresh(s0, obs)
+    for leaf_u, leaf_r in zip(jax.tree.leaves(s_upd.h),
+                              jax.tree.leaves(s_ref.h)):
+        np.testing.assert_allclose(np.asarray(leaf_u), np.asarray(leaf_r))
+    for leaf_u, leaf_r in zip(jax.tree.leaves(s_upd.l),
+                              jax.tree.leaves(s_ref.l)):
+        np.testing.assert_allclose(np.asarray(leaf_u), np.asarray(leaf_r))
+    # refresh is learning-only: step and momentum are untouched
+    assert int(s_ref.step) == int(s0.step)
+    for leaf_0, leaf_r in zip(jax.tree.leaves(s0.mu),
+                              jax.tree.leaves(s_ref.mu)):
+        np.testing.assert_array_equal(np.asarray(leaf_0), np.asarray(leaf_r))
+
+    # update's own step is precondition on the PRE-learning h with the
+    # CURRENT observation's l (the documented legacy blend)
+    upd_a, _ = opt.update(grads, s0, params, observations=obs)
+    upd_b, s_b = opt.precondition(grads, s0._replace(l=s_upd.l), params)
+    for leaf_a, leaf_b in zip(jax.tree.leaves(upd_a),
+                              jax.tree.leaves(upd_b)):
+        np.testing.assert_allclose(np.asarray(leaf_a), np.asarray(leaf_b))
+    assert int(s_upd.step) == int(s_b.step) == 1
+
+
 def test_fednl_precond_pallas_path_builds_no_dense_selection_mask():
     """Acceptance: with the Pallas payload ops forced (the TPU path,
     trace-only so it runs anywhere), the jaxpr of ``update`` contains

@@ -1,0 +1,192 @@
+"""The second-order train step end to end: curvature observations must
+flow through a JITTED ``make_train_step`` (the PR-4 adapter fix only
+covered the optimizer protocol — the step itself used to call
+``optimizer.update`` with 3 args, so the silo-axis channel was dead),
+the refresh interval must gate the expensive phase, microbatch
+accumulation must match the monolithic batch, and optimizer state must
+carry the params' shardings."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_optimizer, make_train_step
+from repro.models import build_model
+
+
+def _tiny(arch="qwen2-0.5b"):
+    cfg = get_config(arch).reduced(n_layers=1, d_model=64, d_ff=128,
+                                   vocab=128)
+    model = build_model(cfg, use_remat=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _batch(cfg, b=4, t=32, seed=0):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (b, t), 0, cfg.vocab)
+    return {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+
+
+def test_fednl_observations_flow_through_jitted_train_step():
+    """Regression for the dead observation path: with exact compression
+    (k = block^2) and alpha=1 from H=0, one jitted train step must leave
+    H == mean over silos of the per-silo squared grads — i.e. the
+    silo-stacked observations really reached ``optimizer.refresh``
+    through the cross-silo payload path, not a global-grad fallback."""
+    cfg, model, params = _tiny()
+    opt = make_optimizer("fednl", 1e-2, k_per_block=64, block=8)
+    batch = _batch(cfg, b=4)
+    step = jax.jit(make_train_step(model, opt, refresh_every=1, n_silos=2))
+
+    state = opt.init(params)
+    _, state, metrics = step(params, state, batch)
+    assert float(metrics["curv_refreshed"]) == 1.0
+
+    half = lambda i: jax.tree.map(lambda x: x[2 * i:2 * i + 2], batch)
+    g0 = jax.grad(model.loss_fn)(params, half(0))
+    g1 = jax.grad(model.loss_fn)(params, half(1))
+    want = jax.tree.map(
+        lambda a, b: (a.astype(jnp.float32) ** 2
+                      + b.astype(jnp.float32) ** 2) / 2, g0, g1)
+    for h, w in zip(jax.tree.leaves(state.h), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(h), np.asarray(w),
+                                   rtol=1e-5, atol=1e-7)
+    # the Option-2 ridge from the same observations rode along
+    assert all(float(x) > 0 for x in jax.tree.leaves(state.l))
+
+
+def test_refresh_interval_gates_curvature():
+    """refresh_every=2: steps 0 and 2 refresh, step 1 must leave H (and
+    the stored ridge) untouched while still preconditioning."""
+    cfg, model, params = _tiny()
+    opt = make_optimizer("fednl", 1e-2, k_per_block=64, block=8)
+    step = jax.jit(make_train_step(model, opt, refresh_every=2, n_silos=2))
+    state = opt.init(params)
+    flags, hs = [], []
+    p = params
+    for i in range(3):
+        p, state, m = step(p, state, _batch(cfg, seed=i))
+        flags.append(float(m["curv_refreshed"]))
+        hs.append(jax.tree.leaves(state.h)[0])
+        assert np.isfinite(float(m["loss"]))
+    assert flags == [1.0, 0.0, 1.0]
+    np.testing.assert_array_equal(np.asarray(hs[0]), np.asarray(hs[1]))
+    assert float(jnp.max(jnp.abs(hs[2] - hs[1]))) > 0
+
+
+def test_hvp_probe_path_trains():
+    """Hutchinson curvature through the jvp-of-grad probe: finite loss,
+    finite learned curvature, refresh engaged."""
+    cfg, model, params = _tiny()
+    opt = make_optimizer("fednl", 1e-3, k_per_block=64, block=8,
+                         curvature="hutchinson")
+    step = jax.jit(make_train_step(model, opt, refresh_every=1, n_silos=2,
+                                   hvp=True))
+    state = opt.init(params)
+    p, state, m = step(params, state, _batch(cfg))
+    assert float(m["curv_refreshed"]) == 1.0
+    assert np.isfinite(float(m["loss"]))
+    for h in jax.tree.leaves(state.h):
+        assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_microbatch_accumulation_equivalence():
+    """microbatches=4 must reproduce the monolithic step: same loss,
+    same grad norm, same updated params (f32 reduction-order noise
+    only). Smoke configs are f32, so tolerances are tight."""
+    cfg, model, params = _tiny()
+    batch = _batch(cfg, b=4)
+    opt = make_optimizer("adamw", 1e-3)
+    s1 = jax.jit(make_train_step(model, opt, microbatches=1))
+    s4 = jax.jit(make_train_step(model, opt, microbatches=4))
+    p1, _, m1 = s1(params, opt.init(params), batch)
+    p4, _, m4 = s4(params, opt.init(params), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(m4["grad_norm"]), rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_first_order_path_unchanged():
+    """The curvature phase must be invisible to first-order optimizers:
+    a step built with refresh/silo args set produces bit-identical
+    params to the plain one, and never reports a refresh."""
+    cfg, model, params = _tiny()
+    batch = _batch(cfg)
+    opt = make_optimizer("adamw", 1e-3)
+    plain = jax.jit(make_train_step(model, opt))
+    gated = jax.jit(make_train_step(model, opt, refresh_every=8, n_silos=2))
+    p_a, _, m_a = plain(params, opt.init(params), batch)
+    p_b, _, m_b = gated(params, opt.init(params), batch)
+    assert float(m_b["curv_refreshed"]) == 0.0
+    for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_uplink_bits_accounting():
+    """Host-side refresh wire cost: positive, linear in n_silos, and a
+    function of the 2D block partition — a (4, 3, 6) tensor costs the
+    same as its (12, 6) collapse."""
+    from repro.second_order import fednl_precond
+
+    opt = make_optimizer("fednl", 1e-3, k_per_block=8, block=8)
+    p3 = {"w": jnp.zeros((4, 3, 6))}
+    p2 = {"w": jnp.zeros((12, 6))}
+    one = opt.uplink_bits(p3)
+    assert one > 0
+    assert opt.uplink_bits(p3, n_silos=3) == 3 * one
+    assert opt.uplink_bits(p2) == one
+    # the adapter exposes the full second-order protocol
+    adapter = fednl_precond(1e-3)
+    assert adapter.observe and adapter.refresh and adapter.precondition
+
+
+def test_opt_state_sharding_matches_params():
+    """4 forced host devices (subprocess so the count doesn't leak):
+    fednl curvature H and momentum carry the params' own NamedShardings;
+    the step counter and per-tensor ridge scalars stay replicated."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.sharding import opt_state_shardings, tree_param_specs
+        from repro.launch.steps import make_optimizer
+        from repro.models import build_model
+
+        cfg = get_config("qwen2-0.5b", smoke=True)
+        model = build_model(cfg, use_remat=True)
+        params = model.init_params(jax.random.PRNGKey(0))
+        mesh = make_host_mesh()
+        params = jax.device_put(params, tree_param_specs(params, mesh, cfg))
+        n_sharded = sum(1 for p in jax.tree.leaves(params)
+                        if not p.sharding.is_fully_replicated)
+        assert n_sharded > 0, "nothing sharded on the 4-way mesh"
+        opt = make_optimizer("fednl", 1e-3, k_per_block=64, block=8)
+        shardings = opt_state_shardings(
+            jax.eval_shape(opt.init, params), params, mesh, cfg)
+        state = jax.jit(opt.init, out_shardings=shardings)(params)
+        spec = lambda t: jax.tree.map(lambda x: x.sharding.spec, t)
+        assert spec(state.h) == spec(params), (spec(state.h), spec(params))
+        assert spec(state.mu) == spec(params)
+        assert state.step.sharding.is_fully_replicated
+        for x in jax.tree.leaves(state.l):
+            assert x.sharding.is_fully_replicated
+        print("OPT_SHARD_OK", n_sharded)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "OPT_SHARD_OK" in out.stdout, out.stdout + out.stderr
