@@ -735,7 +735,10 @@ def server_aggregate(fast=False):
     active tuning cache decides, the CI pin or the winners the
     ``autotune`` bench just recorded) against the untuned
     (512, 512)/512 default, pinning that the tuned config changes
-    nothing numerically."""
+    nothing numerically. The cross-device rows (n in {1k, 10k} silos,
+    payload-space only) pin the streamed silo-slab path bitwise equal
+    to the stacked kernel under cohort weights, with the staged slab
+    bounded by the VMEM budget regardless of n."""
     from repro.core import BlockTopK, Compressor, RankR, TopK
     from repro.kernels.scatter_accum import scatter_accumulate
     from repro.kernels.tuning import lookup as tuned_lookup
@@ -830,6 +833,73 @@ def server_aggregate(fast=False):
             cell.append(f"{name}={speedup:.1f}x")
         fields.append(f"n{n}d{d}:" + ";".join(cell))
 
+    # -- cross-device scale: streamed vs stacked over thousands of silos --
+    # Synthetic TopK pair streams built DIRECTLY in payload space (an
+    # (n, d, d) dense stack at n = 10k would be 20 GiB — the exact
+    # thing this path exists to never materialize). Weights come from
+    # the cohort layer: K-of-N sampling + deadline/staleness discount
+    # on the fl-cross-device link, applied through
+    # ``Compressor.aggregate(..., weights=)``. At both sizes the
+    # concrete pair stream outgrows the 8 MiB VMEM budget, so the
+    # aggregate auto-dispatches the streamed silo-slab path; the
+    # comparator runs the same scaled payloads through the stacked
+    # kernel (jit keeps ``_should_stream`` off the traced path).
+    # Claims: streamed == stacked BITWISE at every n, and the streamed
+    # slab never stages more than the VMEM budget of pairs.
+    from repro.core.cohort import (
+        CohortSpec,
+        arrival_times,
+        on_time_mask,
+        sample_cohort,
+        staleness_weights,
+    )
+    from repro.core.compressors import SparsePayload, scale_payload
+    from repro.kernels import VMEM_BUDGET_BYTES
+    from repro.kernels.scatter_accum import silo_chunk_for
+
+    ok_stream, ok_chunk = True, True
+    k_pairs, d_acc = 1024, 512
+    for n_cd in ([1000] if fast else [1000, 10000]):
+        spec = CohortSpec(cohort=max(1, n_cd // 10), population=n_cd,
+                          link="fl-cross-device", seed=0)
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        payloads = SparsePayload(
+            values=jax.random.normal(ks[0], (n_cd, k_pairs)),
+            indices=jax.random.randint(ks[1], (n_cd, k_pairs), 0,
+                                       d_acc * d_acc, dtype=jnp.int32),
+            universe=d_acc * d_acc)
+        comp = TopK(k=k_pairs)
+        active = sample_cohort(ks[2], n_cd, spec.cohort)
+        times = arrival_times(spec, n_cd, bits_per_silo=96 * k_pairs)
+        on_time = jnp.asarray(on_time_mask(times, spec.deadline_quantile))
+        late = staleness_weights(jnp.ones((n_cd,), jnp.int32),
+                                 spec.staleness_beta)
+        wts = jnp.where(active, jnp.where(on_time, 1.0, late), 0.0)
+        pair = (payloads.values.dtype.itemsize
+                + payloads.indices.dtype.itemsize)
+        chunk = silo_chunk_for(k_pairs, payloads.values.dtype)
+        ok_chunk &= chunk * k_pairs * pair <= VMEM_BUDGET_BYTES
+        streamed_fn = lambda P, c=comp, dd=d_acc, w=wts: c.aggregate(
+            P, (dd, dd), weights=w)           # eager: streams
+        # stacked comparator: the SAME eagerly-scaled pairs through the
+        # stacked kernel (jitting the whole aggregate would let XLA
+        # reassociate the x*w and /n multiplies and shift last bits)
+        scaled = scale_payload(payloads, wts)
+        stacked_fn = lambda _, s=scaled, dd=d_acc, m=n_cd: (
+            scatter_accumulate(s.values, s.indices, (dd, dd)) / m
+        ).reshape(dd, dd)
+        out_stacked, us_stacked = bench(stacked_fn, payloads, reps=3)
+        out_streamed, us_streamed = bench(streamed_fn, payloads, reps=3)
+        exact = bool(jnp.array_equal(out_streamed, out_stacked))
+        ok_stream &= exact
+        err_s = float(jnp.max(jnp.abs(out_streamed - out_stacked)))
+        us_total += us_streamed
+        rows.append((n_cd, d_acc, "topk-streamed", us_stacked,
+                     us_streamed, us_stacked / max(us_streamed, 1e-9),
+                     err_s, "", "", f"silo_chunk={chunk}"))
+        fields.append(f"n{n_cd}d{d_acc}:streamed_exact={exact};"
+                      f"chunk={chunk}")
+
     write_csv("server_aggregate",
               ["n", "d", "compressor", "us_decompress_mean", "us_aggregate",
                "speedup", "max_abs_err", "us_tiled_default",
@@ -839,7 +909,9 @@ def server_aggregate(fast=False):
            + f"|claim_fast_matches_fallback={ok_match}"
            f"|claim_sparse_speedup_ge_2x={ok_speed}"
            f"|claim_tiled_matches_fallback={ok_tiled}"
-           f"|claim_tuned_matches_fallback={ok_tuned}")
+           f"|claim_tuned_matches_fallback={ok_tuned}"
+           f"|claim_streamed_matches_stacked={ok_stream}"
+           f"|claim_stream_chunk_le_budget={ok_chunk}")
 
 
 def precond_step(fast=False):

@@ -7,7 +7,10 @@ closed jaxpr.
                            ``payload_bits(...)``, ``payload.bits(...)``)
                            out of ``src/`` — internal code goes through
                            ``repro.wire.wire_cost``; the aliases stay
-                           only for external users.
+                           only for external users. Also flags the old
+                           hand-composed participation weighting
+                           ``.aggregate(scale_payload(...), ...)`` —
+                           weights are an ``aggregate`` kwarg now.
 """
 
 from __future__ import annotations
@@ -30,6 +33,11 @@ class NoDeprecatedAccessor(Rule):
       * any Load of the name ``payload_bits`` (re-export ImportFrom
         aliases are ast.alias nodes, not Names, so ``__init__``
         re-exports pass)
+      * ``.aggregate(...)`` whose first argument is a
+        ``scale_payload(...)`` call — the pre-redesign participation
+        weighting; pass ``weights=`` to ``aggregate`` instead (the
+        standalone ``scale_payload`` stays fine for payload-level uses
+        that never reach an aggregate)
 
     The defining modules (``core/compressors.py``, ``wire/report.py``)
     are excluded by the target builder, not here.
@@ -37,7 +45,9 @@ class NoDeprecatedAccessor(Rule):
 
     name = "no-deprecated-accessor"
     description = ("internal code uses wire_cost, not the deprecated "
-                   "bits/spec().bits/payload_bits/payload.bits quartet")
+                   "bits/spec().bits/payload_bits/payload.bits quartet; "
+                   "participation weighting goes through "
+                   "aggregate(weights=), not aggregate(scale_payload())")
     kinds = ("source",)
 
     def check(self, path, target: Target):
@@ -53,11 +63,28 @@ class NoDeprecatedAccessor(Rule):
                 "repro.wire.wire_cost (WireReport) instead",
                 f"{path}:{node.lineno}"))
 
+        def is_scale_payload(call) -> bool:
+            if not isinstance(call, ast.Call):
+                return False
+            f = call.func
+            return ((isinstance(f, ast.Name) and f.id == "scale_payload")
+                    or (isinstance(f, ast.Attribute)
+                        and f.attr == "scale_payload"))
+
         for node in ast.walk(tree):
             if isinstance(node, ast.Call):
                 fn = node.func
                 if isinstance(fn, ast.Attribute) and fn.attr == "bits":
                     flag(node, ".bits(...)")
+                elif (isinstance(fn, ast.Attribute)
+                      and fn.attr == "aggregate"
+                      and node.args and is_scale_payload(node.args[0])):
+                    out.append(self.violation(
+                        target,
+                        "hand-composed `.aggregate(scale_payload(...))` "
+                        "— pass the per-silo weights via "
+                        "aggregate(..., weights=w) instead",
+                        f"{path}:{node.lineno}"))
             elif isinstance(node, ast.Attribute) and node.attr == "bits":
                 val = node.value
                 if (isinstance(val, ast.Call)

@@ -36,7 +36,9 @@ _N_SILOS = 3
 _DIM = 16
 
 # Per-method constructor params (harvested from the engine tests): the
-# smallest config each factory accepts.
+# smallest config each factory accepts. "fednl-cohort" needs a
+# ``CohortSpec`` instance — constructed lazily in ``_method_targets``
+# so enumerating targets stays import-light.
 _METHOD_PARAMS = {
     "fednl-pp": {"tau": 2},
     "fednl-cr": {"l_star": 1.0},
@@ -117,6 +119,10 @@ def _method_targets() -> Iterator[Target]:
 
     def one(mname, cname, comp):
         params = dict(_METHOD_PARAMS.get(mname, {}))
+        if mname == "fednl-cohort":
+            from ..core.cohort import CohortSpec
+
+            params["cohort"] = CohortSpec(cohort=2, population=n)
         if mname == "ns":
             params["h_fixed"] = jnp.eye(d, dtype=_float())
         method = make_method(mname, orc, comp, **params)
@@ -161,6 +167,49 @@ def _aggregate_targets() -> Iterator[Target]:
         yield Target(name=f"aggregate:{cname}", kind="aggregate",
                      trace=trace, rules=rules,
                      context={"silo_axis": n, "dense_shape": shape})
+
+    # The cross-device server paths. ``streamed-slab`` is the device-
+    # side jaxpr the host streaming loop replays per silo slab —
+    # exactly what runs when n * k outgrows the VMEM budget — and
+    # ``sharded-window`` is the shard_map'd row-window scatter behind
+    # the mesh-sharded accumulator. Both must keep the payload -> ONE
+    # dense accumulator discipline (no (n, d, d) stack) AND fit every
+    # pallas_call inside the VMEM dispatch budget, so they carry both
+    # rules on top of the baseline set.
+    path_rules = _JAXPR_RULES + ("no-dense-silo-stack", "vmem-budget")
+    path_ctx = {"silo_axis": n, "dense_shape": shape}
+
+    def trace_streamed():
+        from ..kernels.scatter_accum import streamed_slab_update
+
+        acc = jax.ShapeDtypeStruct(shape, _float())
+        vals = jax.ShapeDtypeStruct((n, 5), _float())
+        idx = jax.ShapeDtypeStruct((n, 5), jnp.int32)
+        return jax.make_jaxpr(
+            lambda a, v, i: streamed_slab_update(
+                a, v, i, shape, interpret=True, symmetric=True))(
+                    acc, vals, idx)
+
+    def trace_sharded():
+        import numpy as np
+        from jax.sharding import Mesh
+
+        from ..kernels.scatter_accum import sharded_scatter_accumulate
+
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+        vals = jax.ShapeDtypeStruct((n, 5), _float())
+        idx = jax.ShapeDtypeStruct((n, 5), jnp.int32)
+        return jax.make_jaxpr(
+            lambda v, i: sharded_scatter_accumulate(
+                v, i, shape, mesh, use_pallas=True, interpret=True,
+                symmetric=True))(vals, idx)
+
+    yield Target(name="aggregate:streamed-slab", kind="aggregate",
+                 trace=trace_streamed, rules=path_rules,
+                 context=dict(path_ctx))
+    yield Target(name="aggregate:sharded-window", kind="aggregate",
+                 trace=trace_sharded, rules=path_rules,
+                 context=dict(path_ctx))
 
 
 def _kernel_targets() -> Iterator[Target]:

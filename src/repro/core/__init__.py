@@ -26,6 +26,13 @@ from .compressors import (
     register_compressor,
     scale_payload,
 )
+from .cohort import (
+    CohortFedNLPP,
+    CohortFedNLPPState,
+    CohortSpec,
+    sample_cohort,
+    staleness_weights,
+)
 from .extensions import FedNLPPBC, StochasticFedNL
 from .fednl import FedNL, FedNLState
 from .fednl_bc import FedNLBC, FedNLBCState

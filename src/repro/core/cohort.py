@@ -1,0 +1,243 @@
+"""Cross-device cohort layer on top of FedNL-PP.
+
+FedNL-PP (Algorithm 2) already handles partial participation: tau-of-n
+uniform sampling with zero-weighted inactive silos. The paper runs it
+at cross-silo scale (n ≈ 20). A cross-device deployment changes three
+things, all captured here in ONE spec:
+
+  * the registered *population* N is large (thousands), and every round
+    samples a *cohort* of K participants from it;
+  * participants arrive asynchronously — the traffic model's per-silo
+    upload times (``repro.wire.traffic``, fl-cross-device preset by
+    default) decide who makes the round's deadline, set at a quantile
+    of the cohort's arrival distribution;
+  * stragglers are not dropped: their contributions land with a
+    staleness-decayed weight (1 + s)^(-beta) — the async-FL
+    staleness discount — through the ``weights=`` argument of
+    ``Compressor.aggregate``, the same payload-space weighting the 0/1
+    participation mask uses.
+
+``CohortSpec`` is the single configuration object: ``ExperimentSpec``
+cells, the ``Sweep`` runner, and the ``server_aggregate`` bench axis
+all consume it unchanged instead of growing per-callsite
+n_silos/participation kwargs.
+
+Determinism: cohort sampling is ``jax.random`` keyed off the round key
+(same seed -> same cohorts); arrival times are host numpy keyed off
+``CohortSpec.seed`` and STATIC shapes only — they become jaxpr
+constants, so the step stays one jitted program and never reads a
+traced value on the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..engine.method import Oracles, register
+from .compressors import Compressor
+from .fednl_pp import FedNLPP
+from .linalg import frob_norm, solve_newton_system
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSpec:
+    """Cross-device participation model — one object, consumed uniformly
+    by ``ExperimentSpec``, ``Sweep``, and the bench axis.
+
+    population:        registered clients N; None adopts the problem's
+                       silo count at init (and a set value must match it
+                       — the oracles are built per-silo)
+    cohort:            participants K sampled uniformly per round
+    staleness_beta:    straggler discount exponent — a contribution s
+                       rounds stale is weighted (1 + s)^(-beta); 0
+                       keeps FedNL-PP's pure 0/1 mask
+    link:              traffic-model preset (or LinkModel) whose
+                       per-silo upload-time draws decide who makes the
+                       deadline ("fl-cross-device" by default)
+    deadline_quantile: the round closes at this quantile of the
+                       cohort's arrival-time distribution (1.0 = wait
+                       for every straggler — fully synchronous)
+    seed:              seeds the HOST-side arrival draws (numpy); the
+                       cohort sampling itself rides the method's jax
+                       key chain
+    """
+
+    cohort: int
+    population: Optional[int] = None
+    staleness_beta: float = 0.5
+    link: object = "fl-cross-device"
+    deadline_quantile: float = 0.8
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.cohort < 1:
+            raise ValueError(f"cohort must be >= 1, got {self.cohort}")
+        if self.population is not None and self.population < self.cohort:
+            raise ValueError(
+                f"population ({self.population}) smaller than cohort "
+                f"({self.cohort})")
+        if not 0.0 < self.deadline_quantile <= 1.0:
+            raise ValueError("deadline_quantile must be in (0, 1], got "
+                             f"{self.deadline_quantile}")
+        if self.staleness_beta < 0.0:
+            raise ValueError("staleness_beta must be >= 0, got "
+                             f"{self.staleness_beta}")
+
+
+def sample_cohort(key: jax.Array, population: int,
+                  cohort: int) -> jax.Array:
+    """(population,) bool mask of a uniform K-of-N cohort — exactly
+    ``min(cohort, population)`` True entries, deterministic per key."""
+    perm = jax.random.permutation(key, population)
+    k = min(int(cohort), int(population))
+    return jnp.zeros((population,), bool).at[perm[:k]].set(True)
+
+
+def arrival_times(spec: CohortSpec, n: int,
+                  bits_per_silo: float) -> np.ndarray:
+    """(n,) HOST-side per-silo upload seconds for one round, drawn from
+    the spec's link model — deterministic in ``spec.seed`` and static
+    shapes only (safe to call at trace time; the result is a jaxpr
+    constant)."""
+    from ..wire.traffic import link_model
+
+    link = link_model(spec.link)
+    return link.silo_seconds(float(bits_per_silo), int(n), seed=spec.seed)
+
+
+def on_time_mask(times: np.ndarray, deadline_quantile: float) -> np.ndarray:
+    """(n,) bool: who beats the round deadline, set at the configured
+    quantile of the cohort's arrival distribution."""
+    deadline = np.quantile(times, float(deadline_quantile))
+    return times <= deadline
+
+
+def staleness_weights(staleness: jax.Array, beta: float) -> jax.Array:
+    """(1 + s)^(-beta) straggler discount; beta = 0 gives weight 1."""
+    s = jnp.maximum(staleness, 0).astype(jnp.result_type(float))
+    return (1.0 + s) ** (-float(beta))
+
+
+class CohortFedNLPPState(NamedTuple):
+    w: jax.Array           # (n, d) stale local models
+    h_local: jax.Array     # (n, d, d)
+    l_local: jax.Array     # (n,)
+    g_local: jax.Array     # (n, d)
+    h_global: jax.Array    # (d, d)
+    l_global: jax.Array    # ()
+    g_global: jax.Array    # (d,)
+    x: jax.Array           # (d,)
+    key: jax.Array
+    step: jax.Array
+    last_round: jax.Array  # (n,) int32 — round each silo last landed
+
+
+class CohortFedNLPP(FedNLPP):
+    """FedNL-PP with the cohort layer: K-of-N sampling, deadline-based
+    arrival, staleness-weighted straggler contributions.
+
+    Server update: H^{k+1} = H^k + alpha * mean_i w_i S_i with
+    w_i = active_i * (1 if on time else (1 + staleness_i)^(-beta)); the
+    local H_i applies the SAME weighted increment, so the server
+    aggregate stays the exact mean of the local updates (the line 18-20
+    consistency FedNL-PP relies on). beta = 0 and deadline_quantile = 1
+    recover FedNL-PP with tau = cohort exactly."""
+
+    silo_fields = FedNLPP.silo_fields + ("last_round",)
+
+    def __init__(
+        self,
+        grad_fn_at: Callable[[jax.Array], jax.Array],
+        hess_fn_at: Callable[[jax.Array], jax.Array],
+        compressor: Compressor,
+        cohort: CohortSpec,
+        alpha: float = 1.0,
+    ):
+        super().__init__(grad_fn_at, hess_fn_at, compressor,
+                         tau=cohort.cohort, alpha=alpha)
+        self.cohort = cohort
+
+    def init(self, x0: jax.Array, n: int, seed: int = 0):
+        if (self.cohort.population is not None
+                and int(self.cohort.population) != int(n)):
+            raise ValueError(
+                f"CohortSpec.population={self.cohort.population} but the "
+                f"problem has n={n} silos")
+        base = super().init(x0, n, seed=seed)
+        return CohortFedNLPPState(
+            *base, last_round=jnp.zeros((n,), jnp.int32))
+
+    def _round_weights(self, state: CohortFedNLPPState,
+                       active: jax.Array) -> jax.Array:
+        """(n,) per-silo aggregation weights for this round: 0 for the
+        unsampled, 1 for on-time arrivals, the staleness discount for
+        stragglers. Arrival times are trace-time host constants (static
+        shapes + CohortSpec.seed only)."""
+        from ..wire.report import wire_cost
+
+        n = state.w.shape[0]
+        d = state.x.shape[0]
+        bits = wire_cost(self.comp, (d, d), encoded=False).analytic_bits
+        times = arrival_times(self.cohort, n, bits)
+        on_time = jnp.asarray(on_time_mask(
+            times, self.cohort.deadline_quantile))
+        staleness = state.step - state.last_round
+        decay = staleness_weights(staleness, self.cohort.staleness_beta)
+        late_w = decay.astype(state.x.dtype)
+        w = jnp.where(on_time, jnp.ones_like(late_w), late_w)
+        return jnp.where(active, w, jnp.zeros_like(w))
+
+    def step(self, state: CohortFedNLPPState) -> CohortFedNLPPState:
+        n, d = state.w.shape
+        key, k_sel, k_comp = jax.random.split(state.key, 3)
+
+        h_eff = (state.h_global
+                 + state.l_global * jnp.eye(d, dtype=state.x.dtype))
+        x_new = solve_newton_system(h_eff, state.g_global)
+
+        active = sample_cohort(k_sel, n, self.tau)
+        wts = self._round_weights(state, active)
+
+        silo_keys = jax.random.split(k_comp, n)
+        hess_new = self.hess_fn(x_new)
+        grads_new = self.grad_fn(x_new)
+
+        payloads, _ = self._uplink_diff_payloads(hess_new, state.h_local,
+                                                 silo_keys)
+        s_i = self._local_hessians(payloads, (d, d))
+        # the weighted increment, applied identically on device and (as
+        # the payload-space weighted mean) on the server
+        h_upd = state.h_local + self.alpha * wts[:, None, None] * s_i
+        l_upd = jax.vmap(frob_norm)(h_upd - hess_new)
+        eye = jnp.eye(d, dtype=state.x.dtype)
+        g_upd = jax.vmap(lambda h, l, gi: (h + l * eye) @ x_new - gi)(
+            h_upd, l_upd, grads_new)
+
+        mask = active[:, None]
+        maskm = active[:, None, None]
+        w_next = jnp.where(mask, x_new[None], state.w)
+        h_next = jnp.where(maskm, h_upd, state.h_local)
+        l_next = jnp.where(active, l_upd, state.l_local)
+        g_next = jnp.where(mask, g_upd, state.g_local)
+        last_next = jnp.where(active, state.step + 1, state.last_round)
+
+        h_global = state.h_global + self.alpha * self._server_aggregate(
+            payloads, (d, d), weights=wts)
+        l_global = state.l_global + jnp.mean(
+            jnp.where(active, l_upd - state.l_local, 0.0))
+        g_global = state.g_global + jnp.mean(
+            jnp.where(mask, g_upd - state.g_local, 0.0), axis=0)
+
+        return CohortFedNLPPState(
+            w_next, h_next, l_next, g_next, h_global, l_global, g_global,
+            x_new, key, state.step + 1, last_next)
+
+
+@register("fednl-cohort")
+def _make_fednl_cohort(oracles: Oracles, compressor, **params):
+    return CohortFedNLPP(oracles.grad, oracles.hess, compressor, **params)

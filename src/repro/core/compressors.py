@@ -60,6 +60,7 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 FLOAT_BITS = 64  # the paper counts double-precision floats
 INDEX_BITS = 32
@@ -330,7 +331,14 @@ def scale_payload(payload, w: jax.Array):
     ``w_i * decompress(payload_i)``. Zero weight removes a silo from
     ``Compressor.aggregate`` — the partial-participation mask. The
     scale multiplies the one leaf each wire format is linear in
-    (values; low-rank middle; dithering signs)."""
+    (values; low-rank middle; dithering signs).
+
+    Documented alias: ``Compressor.aggregate(payloads, shape,
+    weights=w)`` applies this internally — pass weights there instead
+    of composing the two calls by hand (the no-deprecated-accessor
+    analysis rule flags the old ``aggregate(scale_payload(...))``
+    composition). The standalone form stays for payload-level uses that
+    never reach an aggregate (e.g. wire experiments)."""
     if isinstance(payload, LowRankPayload):
         field = "middle"
     elif isinstance(payload, DitheredPayload):
@@ -343,6 +351,24 @@ def scale_payload(payload, w: jax.Array):
     return dataclasses.replace(payload, **{field: leaf * wb})
 
 
+def _should_stream(vals, idx) -> bool:
+    """Stream the silo axis from host memory once the stacked pair
+    stream outgrows the kernel VMEM budget. Only concrete arrays can
+    stream (a traced aggregate — inside jit/vmap/eval_shape — keeps the
+    stacked kernel, whose BlockSpecs already bound VMEM per program;
+    what streaming bounds is the *device-resident stack*, which only
+    exists for concrete cross-device-scale inputs)."""
+    from ..kernels import VMEM_BUDGET_BYTES
+
+    if isinstance(vals, jax.core.Tracer):
+        return False
+    if not isinstance(vals, (np.ndarray, jax.Array)):
+        return False  # ShapeDtypeStruct etc. — trace-only callers
+    n, k = vals.shape
+    pair = jnp.dtype(vals.dtype).itemsize + jnp.dtype(idx.dtype).itemsize
+    return n * k * pair > VMEM_BUDGET_BYTES
+
+
 def _sparse_aggregate(payloads: "SparsePayload", shape,
                       symmetric: bool = False) -> jax.Array:
     """mean_i of stacked SparsePayloads via ONE dense accumulator
@@ -351,16 +377,27 @@ def _sparse_aggregate(payloads: "SparsePayload", shape,
     XLA scatter-add elsewhere). -1 padding is dropped; duplicate
     indices across silos accumulate — exactly the server sum.
     ``symmetric`` mirrors lower-triangular payloads inside the same
-    scatter pass (the fused symmetric-TopK server mean)."""
-    from ..kernels.scatter_accum import scatter_accumulate
+    scatter pass (the fused symmetric-TopK server mean). Concrete
+    stacks whose (value, index) pair stream outgrows the VMEM budget
+    are streamed silo-slab by silo-slab instead (bitwise equal —
+    kernels/scatter_accum/ops.py)."""
+    from ..kernels.scatter_accum import (
+        scatter_accumulate,
+        streamed_scatter_accumulate,
+    )
 
     n = payloads.values.shape[0]
     shape2 = tuple(int(s) for s in shape)
     if len(shape2) != 2:  # vectors (downlink model payloads) etc.
         shape2 = (1, numel(shape))
         symmetric = False
-    total = scatter_accumulate(payloads.values, payloads.indices, shape2,
-                               symmetric=symmetric)
+    if _should_stream(payloads.values, payloads.indices):
+        total = streamed_scatter_accumulate(payloads.values,
+                                            payloads.indices, shape2,
+                                            symmetric=symmetric)
+    else:
+        total = scatter_accumulate(payloads.values, payloads.indices,
+                                   shape2, symmetric=symmetric)
     return (total / n).reshape(shape)
 
 
@@ -416,18 +453,25 @@ class Compressor:
     def __call__(self, m: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
         return self.decompress(self.compress(m, key), m.shape)
 
-    def aggregate(self, payloads, shape) -> jax.Array:
+    def aggregate(self, payloads, shape, weights=None) -> jax.Array:
         """Server-side mean over silos, straight from payload space.
 
         ``payloads`` is a STACKED payload pytree with a leading silo
         axis (the output of ``jax.vmap(self.compress)``); returns the
-        dense ``mean_i decompress(payload_i, shape)`` as ONE (d, d)
-        array. This generic fallback decompresses-then-means (the only
-        place an (n, d, d) stack is ever allowed on the server);
-        subclasses override with structure-aware accumulation that
-        never materializes it. Equivalence is pinned per registered
-        family by tests/test_aggregate.py (f64 tolerance — reduction
-        order differs)."""
+        dense ``mean_i w_i * decompress(payload_i, shape)`` as ONE
+        (d, d) array. ``weights`` is an optional (n,) per-silo scale
+        applied in payload space (``scale_payload``) BEFORE the
+        reduction — the partial-participation mask and the cohort
+        layer's staleness weights in one place; every override inherits
+        it through this same pre-scale, so weighting is uniform across
+        wire formats. This generic fallback decompresses-then-means
+        (the only place an (n, d, d) stack is ever allowed on the
+        server); subclasses override with structure-aware accumulation
+        that never materializes it. Equivalence is pinned per
+        registered family by tests/test_aggregate.py (f64 tolerance —
+        reduction order differs)."""
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
         dec = jax.vmap(lambda p: self.decompress(p, shape))(payloads)
         return jnp.mean(dec, axis=0)
 
@@ -571,7 +615,8 @@ class TopK(Compressor):
             return c + c.T - jnp.diag(jnp.diag(c))
         return c
 
-    def aggregate(self, payloads: SparsePayload, shape) -> jax.Array:
+    def aggregate(self, payloads: SparsePayload, shape,
+                  weights=None) -> jax.Array:
         """Scatter-add all n*k (value, index) pairs into ONE dense
         accumulator, then mean. The symmetric mirror is FUSED into the
         scatter itself (each off-diagonal pair lands at (r, c) and
@@ -579,6 +624,8 @@ class TopK(Compressor):
         ``c + c.T - diag(diag(c))`` sweep over the dense accumulator —
         mirroring is linear, so it commutes with the mean. Never builds
         the (n, d, d) stack."""
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
         sym = self.symmetric and len(shape) == 2 and shape[0] == shape[1]
         return _sparse_aggregate(payloads, shape, symmetric=sym)
 
@@ -632,6 +679,7 @@ class _BlockSparse(Compressor):
         return _from_tiles(out, shape, b)
 
     def aggregate(self, payloads: BlockSparsePayload, shape,
+                  weights=None,
                   use_pallas: Optional[bool] = None) -> jax.Array:
         """Per-tile scatter-add of all n silos' pairs into ONE tiled
         accumulator (kernels/scatter_accum block kernel on TPU), then
@@ -641,6 +689,8 @@ class _BlockSparse(Compressor):
         pin its jaxpr-inspected TPU path."""
         from ..kernels.scatter_accum import block_scatter_accumulate
 
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
         b = self.block
         n = payloads.values.shape[0]
         gm, gn = -(-int(shape[0]) // b), -(-int(shape[1]) // b)
@@ -785,7 +835,10 @@ class RankR(Compressor):
     def decompress(self, payload: LowRankPayload, shape) -> jax.Array:
         return (payload.left * payload.middle) @ payload.right.T
 
-    def aggregate(self, payloads: LowRankPayload, shape) -> jax.Array:
+    def aggregate(self, payloads: LowRankPayload, shape,
+                  weights=None) -> jax.Array:
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
         return _lowrank_aggregate(payloads, shape)
 
     def spec(self, shape) -> CompSpec:
@@ -836,9 +889,12 @@ class PowerSGD(Compressor):
     def decompress(self, payload: LowRankPayload, shape) -> jax.Array:
         return (payload.left @ payload.right.T) * payload.middle[0]
 
-    def aggregate(self, payloads: LowRankPayload, shape) -> jax.Array:
+    def aggregate(self, payloads: LowRankPayload, shape,
+                  weights=None) -> jax.Array:
         # (L_i @ R_i^T) * mid_i[0] == (L_i * mid_i) @ R_i^T — same
         # stacked-factor contraction as RankR
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
         return _lowrank_aggregate(payloads, shape)
 
     def spec(self, shape) -> CompSpec:
@@ -861,9 +917,12 @@ class Identity(Compressor):
     def decompress(self, payload: DensePayload, shape) -> jax.Array:
         return payload.values.reshape(shape)
 
-    def aggregate(self, payloads: DensePayload, shape) -> jax.Array:
+    def aggregate(self, payloads: DensePayload, shape,
+                  weights=None) -> jax.Array:
         # the wire IS dense: the mean over the stacked wire values is
         # the server reduction itself (no decompress round-trip)
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
         n = payloads.values.shape[0]
         return jnp.mean(payloads.values.reshape((n,) + tuple(shape)), axis=0)
 
@@ -886,8 +945,9 @@ class Zero(Compressor):
         return _scatter_flat(payload.values, payload.indices,
                              numel(shape)).reshape(shape)
 
-    def aggregate(self, payloads: SparsePayload, shape) -> jax.Array:
-        return jnp.zeros(shape, payloads.values.dtype)
+    def aggregate(self, payloads: SparsePayload, shape,
+                  weights=None) -> jax.Array:
+        return jnp.zeros(shape, payloads.values.dtype)  # w * 0 == 0
 
     def spec(self, shape) -> CompSpec:
         return CompSpec(delta=0.0, omega=None, bits=0, deterministic=True)
@@ -920,7 +980,10 @@ class RandK(Compressor):
         return _scatter_flat(payload.values, payload.indices,
                              numel(shape)).reshape(shape)
 
-    def aggregate(self, payloads: SparsePayload, shape) -> jax.Array:
+    def aggregate(self, payloads: SparsePayload, shape,
+                  weights=None) -> jax.Array:
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
         return _sparse_aggregate(payloads, shape)
 
     def spec(self, shape) -> CompSpec:
@@ -959,11 +1022,14 @@ class RandomDithering(Compressor):
         out = payload.signs * norm * levels
         return jnp.where(norm > 1e-29, out, jnp.zeros_like(out)).reshape(shape)
 
-    def aggregate(self, payloads: DitheredPayload, shape) -> jax.Array:
+    def aggregate(self, payloads: DitheredPayload, shape,
+                  weights=None) -> jax.Array:
         # direct mean of the elementwise decode: the dithered wire is
         # already dense-sized (a level per entry), so vmapped decode +
         # mean IS the payload-space reduction — one decode
         # implementation, no extra dense intermediates beyond the wire
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
         dec = jax.vmap(lambda p: self.decompress(p, shape))(payloads)
         return jnp.mean(dec, axis=0)
 
@@ -1001,7 +1067,10 @@ class NaturalSparsification(Compressor):
     def decompress(self, payload: DensePayload, shape) -> jax.Array:
         return payload.values.reshape(shape)
 
-    def aggregate(self, payloads: DensePayload, shape) -> jax.Array:
+    def aggregate(self, payloads: DensePayload, shape,
+                  weights=None) -> jax.Array:
+        if weights is not None:
+            payloads = scale_payload(payloads, weights)
         n = payloads.values.shape[0]
         return jnp.mean(payloads.values.reshape((n,) + tuple(shape)), axis=0)
 

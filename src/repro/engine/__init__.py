@@ -44,3 +44,16 @@ from .sweep import (
     run_cell,
     run_sweep,
 )
+
+#: ``CohortSpec`` re-exported lazily: ``core.cohort`` imports this
+#: package's ``method`` submodule (to register "fednl-cohort"), so a
+#: top-level ``from ..core.cohort import ...`` here would be a cycle.
+#: Module __getattr__ defers the import until first access.
+
+
+def __getattr__(name):
+    if name == "CohortSpec":
+        from ..core.cohort import CohortSpec
+
+        return CohortSpec
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -123,14 +123,12 @@ class MethodBase:
         """Server side: S^k = mean_i S_i^k computed in payload space
         (``Compressor.aggregate`` — scatter-add / stacked factors /
         direct mean, one dense accumulator total). ``weights`` rescales
-        per-silo contributions (partial participation masks with 0/1).
+        per-silo contributions (partial-participation masks with 0/1,
+        the cohort layer's staleness weights) and is applied INSIDE
+        ``aggregate`` — the one weighting point for every wire format.
         Under shard_map (``axis_name`` set) the cross-silo reduction
         happens HERE, on the dense accumulator: one pmean of (d, d)."""
-        from ..core.compressors import scale_payload
-
-        if weights is not None:
-            payloads = scale_payload(payloads, weights)
-        s = self.comp.aggregate(payloads, shape)
+        s = self.comp.aggregate(payloads, shape, weights=weights)
         axis = getattr(self, "axis_name", None)
         if axis is not None:
             s = jax.lax.pmean(s, axis)

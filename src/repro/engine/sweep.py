@@ -68,6 +68,13 @@ class ExperimentSpec:
     seeds:      PRNG seeds — stacked into one vmapped program
     num_rounds: communication rounds (the scan length)
     name:       display label (auto-generated when omitted)
+    cohort:     optional ``repro.core.cohort.CohortSpec`` — the
+                cross-device participation model, passed through to
+                methods that take one (``"fednl-cohort"``); the ONE
+                place a cell declares population/cohort/arrival instead
+                of ad-hoc per-callsite kwargs. Also retargets the
+                ``seconds_per_round`` traffic column onto the cohort's
+                link and size.
     """
 
     method: str
@@ -77,6 +84,7 @@ class ExperimentSpec:
     seeds: Sequence[int] = (0,)
     num_rounds: int = 50
     name: Optional[str] = None
+    cohort: Optional[Any] = None
 
     def __post_init__(self):
         object.__setattr__(self, "params", dict(self.params))
@@ -90,13 +98,20 @@ class ExperimentSpec:
         if self.compressor:
             lvl = "" if self.level is None else f"{self.level:g}"
             parts.append(f"{self.compressor}{lvl}")
+        if self.cohort is not None:
+            pop = self.cohort.population
+            parts.append(f"K{self.cohort.cohort}" +
+                         (f"ofN{pop}" if pop is not None else ""))
         return ":".join(parts)
 
     def build(self, oracles: Oracles):
         """Instantiate the method object for this cell."""
         comp = (build_compressor(self.compressor, self.level)
                 if self.compressor else None)
-        return make_method(self.method, oracles, comp, **dict(self.params))
+        params = dict(self.params)
+        if self.cohort is not None:
+            params["cohort"] = self.cohort
+        return make_method(self.method, oracles, comp, **params)
 
 
 @dataclass
@@ -224,11 +239,22 @@ class Sweep:
                 bits_entropy=rec.entropy_bits_curve(
                     method, d, spec.num_rounds),
                 us_per_round=wall_us / max(1, spec.num_rounds),
-                seconds_per_round=(
-                    rec.seconds_per_round(method, d, n, link=self.link)
-                    if self.link is not None else None),
+                seconds_per_round=self._cell_seconds(spec, method, d, n),
             ))
         return SweepResult(cells)
+
+    def _cell_seconds(self, spec: ExperimentSpec, method, d: int,
+                      n: int) -> Optional[float]:
+        """Traffic-model pricing for one cell: a ``cohort=`` cell is
+        priced on ITS link and cohort size (the round waits for the
+        sampled K, not all N registered clients); everything else uses
+        the sweep-wide ``link`` preset over the problem's n silos."""
+        if spec.cohort is not None:
+            return rec.seconds_per_round(method, d, spec.cohort.cohort,
+                                         link=spec.cohort.link)
+        if self.link is None:
+            return None
+        return rec.seconds_per_round(method, d, n, link=self.link)
 
     # -- shard_map path (reuses core/federated.py's mesh axis) -----------------
 

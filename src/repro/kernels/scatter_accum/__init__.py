@@ -1,13 +1,28 @@
 from .kernel import scatter_accum_tiled_kernel
-from .ops import block_scatter_accumulate, scatter_accumulate
+from .ops import (
+    block_scatter_accumulate,
+    scatter_accumulate,
+    silo_chunk_for,
+    streamed_scatter_accumulate,
+    streamed_slab_update,
+)
 from .ref import block_scatter_accumulate_ref, scatter_accumulate_ref
+from .sharded import (
+    mirror_expand_pairs,
+    row_window_scatter,
+    sharded_scatter_accumulate,
+)
 
 
 def analysis_targets():
     """Representative traced configs for the static-analysis sweep:
     both dispatch regimes of ``scatter_accumulate`` (single-block and
-    VMEM-tiled — the tiled shape would blow the budget single-block)
-    plus the block-sparse path. Pallas bodies forced; trace-only."""
+    VMEM-tiled — the tiled shape would blow the budget single-block),
+    the block-sparse path, the streamed silo-slab update (the
+    cross-device server's inner kernel: one slab + the running
+    accumulator, VMEM-bounded regardless of n), and the sharded
+    row-window scatter (row0 traced, as under shard_map). Pallas bodies
+    forced; trace-only."""
     import jax
     import jax.numpy as jnp
 
@@ -42,6 +57,25 @@ def analysis_targets():
                 lambda v, i: scatter_accumulate(
                     v, i, (1024, 1024), use_pallas=True,
                     interpret=True, symmetric=True))(v_s, i_s),
+            "context": {},
+        },
+        {
+            "name": "streamed_slab_update[4096x4096,tiled,slab=4]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda a, v, i: streamed_slab_update(
+                    a, v, i, (4096, 4096), interpret=True,
+                    tile=(512, 512), chunk=512))(
+                jax.ShapeDtypeStruct((4096, 4096), jnp.float32),
+                v_t, i_t),
+            "context": {},
+        },
+        {
+            "name": "row_window_scatter[1024-row window of 4096x4096]",
+            "trace": lambda: jax.make_jaxpr(
+                lambda v, i, r0: row_window_scatter(
+                    v, i, (4096, 4096), r0, 1024, use_pallas=True,
+                    interpret=True))(
+                v_t, i_t, jax.ShapeDtypeStruct((), jnp.int32)),
             "context": {},
         },
         {

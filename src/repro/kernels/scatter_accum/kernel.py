@@ -74,6 +74,27 @@ def _mirror_vals(vals, rows, cols):
     return jnp.where(rows == cols, jnp.zeros_like(vals), vals)
 
 
+def _chunk_contribution(vals, idx, *, d1: int, row0, col0, tm: int,
+                        tn: int, symmetric: bool):
+    """Dense (tm, tn) window contribution of one (1, ck) pair chunk.
+
+    ``row0``/``col0`` shift into window-local coordinates (0 for the
+    single-block kernel, the tile origin for the tiled one): entries
+    outside the window — including -1 padding, whose row is negative —
+    match no one-hot column and contribute zero. ``symmetric`` adds each
+    off-diagonal entry's mirror through the identical window test."""
+    rows = idx // d1                                    # -1 -> -1 (no match)
+    cols = idx - rows * d1
+    acc = _acc_dtype(vals.dtype)
+    contrib = _onehot_contribution(vals, rows - row0, cols - col0,
+                                   tm, tn, acc)
+    if symmetric:
+        contrib += _onehot_contribution(_mirror_vals(vals, rows, cols),
+                                        cols - row0, rows - col0,
+                                        tm, tn, acc)
+    return contrib
+
+
 def _scatter_accum_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int,
                                symmetric: bool = False):
     """One (value, index) chunk of one silo; all programs revisit the
@@ -85,42 +106,72 @@ def _scatter_accum_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int,
     def _():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    vals = vals_ref[...]                                # (1, ck)
-    idx = idx_ref[...]                                  # (1, ck) int32
     d0p, d1p = out_ref.shape
-    rows = idx // d1                                    # -1 -> -1 (no match)
-    cols = idx - rows * d1
-    acc = _acc_dtype(vals.dtype)
-    contrib = _onehot_contribution(vals, rows, cols, d0p, d1p, acc)
-    if symmetric:
-        contrib += _onehot_contribution(_mirror_vals(vals, rows, cols),
-                                        cols, rows, d0p, d1p, acc)
+    contrib = _chunk_contribution(vals_ref[...], idx_ref[...], d1=d1,
+                                  row0=0, col0=0, tm=d0p, tn=d1p,
+                                  symmetric=symmetric)
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+def _scatter_accum_tile_init_kernel(vals_ref, idx_ref, init_ref, out_ref,
+                                    *, d1: int, symmetric: bool = False):
+    """Streaming variant of ``_scatter_accum_tile_kernel``: program 0
+    seeds the output block from a caller-provided accumulator instead of
+    zeros, so a slab of silos continues the running server sum in the
+    exact same add order as one stacked pass over all silos."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        out_ref[...] = init_ref[...]
+
+    d0p, d1p = out_ref.shape
+    contrib = _chunk_contribution(vals_ref[...], idx_ref[...], d1=d1,
+                                  row0=0, col0=0, tm=d0p, tn=d1p,
+                                  symmetric=symmetric)
     out_ref[...] += contrib.astype(out_ref.dtype)
 
 
 def scatter_accum_kernel(values: jax.Array, indices: jax.Array,
                          out_shape, d1: int,
                          interpret: bool = False,
-                         symmetric: bool = False) -> jax.Array:
+                         symmetric: bool = False,
+                         init: jax.Array | None = None) -> jax.Array:
     """values/indices: (nchunks, ck) — silo payloads flattened into
     fixed-size chunks (ops.py pads with value 0 / index -1). Returns the
     (d0p, d1p) = ``out_shape`` dense SUM; ``d1`` is the unpadded column
     count of the matrix the flat indices address. ``symmetric`` adds
     each off-diagonal entry's mirror in the same pass (lower-triangular
-    payloads: the fused symmetric-TopK server sum)."""
+    payloads: the fused symmetric-TopK server sum). ``init`` seeds the
+    accumulator with a prior (d0p, d1p) partial sum (the streamed path's
+    running total) instead of zeros."""
     nchunks, ck = values.shape
+    if init is None:
+        return pl.pallas_call(
+            functools.partial(_scatter_accum_tile_kernel, d1=d1,
+                              symmetric=symmetric),
+            grid=(nchunks,),
+            in_specs=[
+                pl.BlockSpec((1, ck), lambda i: (i, 0)),
+                pl.BlockSpec((1, ck), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec(out_shape, lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct(out_shape, values.dtype),
+            interpret=interpret,
+        )(values, indices)
     return pl.pallas_call(
-        functools.partial(_scatter_accum_tile_kernel, d1=d1,
+        functools.partial(_scatter_accum_tile_init_kernel, d1=d1,
                           symmetric=symmetric),
         grid=(nchunks,),
         in_specs=[
             pl.BlockSpec((1, ck), lambda i: (i, 0)),
             pl.BlockSpec((1, ck), lambda i: (i, 0)),
+            pl.BlockSpec(out_shape, lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec(out_shape, lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct(out_shape, values.dtype),
         interpret=interpret,
-    )(values, indices)
+    )(values, indices, init)
 
 
 def _scatter_accum_tiled_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int,
@@ -137,29 +188,39 @@ def _scatter_accum_tiled_tile_kernel(vals_ref, idx_ref, out_ref, *, d1: int,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     tm, tn = out_ref.shape
-    vals = vals_ref[...]                                # (1, ck)
-    idx = idx_ref[...]                                  # (1, ck) int32
-    rows = idx // d1                                    # -1 -> -1
-    cols = idx - rows * d1
-    # shift into tile-local coordinates: entries outside this tile's
-    # [row0, row0+tm) x [col0, col0+tn) window — including -1 padding,
-    # whose row is negative — match no one-hot column and contribute 0
-    row0 = pl.program_id(0) * tm
-    col0 = pl.program_id(1) * tn
-    acc = _acc_dtype(vals.dtype)
-    contrib = _onehot_contribution(vals, rows - row0, cols - col0,
-                                   tm, tn, acc)
-    if symmetric:
-        contrib += _onehot_contribution(_mirror_vals(vals, rows, cols),
-                                        cols - row0, rows - col0,
-                                        tm, tn, acc)
+    contrib = _chunk_contribution(vals_ref[...], idx_ref[...], d1=d1,
+                                  row0=pl.program_id(0) * tm,
+                                  col0=pl.program_id(1) * tn,
+                                  tm=tm, tn=tn, symmetric=symmetric)
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+def _scatter_accum_tiled_tile_init_kernel(vals_ref, idx_ref, init_ref,
+                                          out_ref, *, d1: int,
+                                          symmetric: bool = False):
+    """Streaming variant of ``_scatter_accum_tiled_tile_kernel``: each
+    output tile's first chunk program copies the matching tile of a
+    caller-provided accumulator instead of zeroing, so slabs of silos
+    chain with the identical per-tile add order as one stacked pass."""
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _():
+        out_ref[...] = init_ref[...]
+
+    tm, tn = out_ref.shape
+    contrib = _chunk_contribution(vals_ref[...], idx_ref[...], d1=d1,
+                                  row0=pl.program_id(0) * tm,
+                                  col0=pl.program_id(1) * tn,
+                                  tm=tm, tn=tn, symmetric=symmetric)
     out_ref[...] += contrib.astype(out_ref.dtype)
 
 
 def scatter_accum_tiled_kernel(values: jax.Array, indices: jax.Array,
                                out_shape, d1: int, tile,
                                interpret: bool = False,
-                               symmetric: bool = False) -> jax.Array:
+                               symmetric: bool = False,
+                               init: jax.Array | None = None) -> jax.Array:
     """Tiled variant of ``scatter_accum_kernel``: same (nchunks, ck)
     chunked pair stream, but the output is produced as a 2-D grid of
     (tm, tn) = ``tile`` blocks so VMEM holds one tile, not the matrix.
@@ -167,24 +228,40 @@ def scatter_accum_tiled_kernel(values: jax.Array, indices: jax.Array,
     pads); ``d1`` is the unpadded column count the flat indices address.
     ``symmetric`` mirrors off-diagonal entries in the same pass — the
     mirrored coordinates go through the identical tile-window test, so
-    each mirror lands in exactly the tile that owns it.
+    each mirror lands in exactly the tile that owns it. ``init`` seeds
+    each output tile from the matching tile of a prior (d0p, d1p)
+    partial sum (the streamed path's running total) instead of zeros.
     """
     nchunks, ck = values.shape
     d0p, d1p = (int(s) for s in out_shape)
     tm, tn = (int(t) for t in tile)
     assert d0p % tm == 0 and d1p % tn == 0, (out_shape, tile)
+    if init is None:
+        return pl.pallas_call(
+            functools.partial(_scatter_accum_tiled_tile_kernel, d1=d1,
+                              symmetric=symmetric),
+            grid=(d0p // tm, d1p // tn, nchunks),
+            in_specs=[
+                pl.BlockSpec((1, ck), lambda i, j, c: (c, 0)),
+                pl.BlockSpec((1, ck), lambda i, j, c: (c, 0)),
+            ],
+            out_specs=pl.BlockSpec((tm, tn), lambda i, j, c: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((d0p, d1p), values.dtype),
+            interpret=interpret,
+        )(values, indices)
     return pl.pallas_call(
-        functools.partial(_scatter_accum_tiled_tile_kernel, d1=d1,
+        functools.partial(_scatter_accum_tiled_tile_init_kernel, d1=d1,
                           symmetric=symmetric),
         grid=(d0p // tm, d1p // tn, nchunks),
         in_specs=[
             pl.BlockSpec((1, ck), lambda i, j, c: (c, 0)),
             pl.BlockSpec((1, ck), lambda i, j, c: (c, 0)),
+            pl.BlockSpec((tm, tn), lambda i, j, c: (i, j)),
         ],
         out_specs=pl.BlockSpec((tm, tn), lambda i, j, c: (i, j)),
         out_shape=jax.ShapeDtypeStruct((d0p, d1p), values.dtype),
         interpret=interpret,
-    )(values, indices)
+    )(values, indices, init)
 
 
 def _block_scatter_tile_kernel(vals_ref, idx_ref, out_ref, *, block: int):

@@ -11,7 +11,8 @@ import jax.numpy as jnp
 
 
 def scatter_accumulate_ref(values: jax.Array, indices: jax.Array,
-                           shape, symmetric: bool = False) -> jax.Array:
+                           shape, symmetric: bool = False,
+                           init: jax.Array | None = None) -> jax.Array:
     """Dense (d0, d1) SUM of n sparse silo payloads.
 
     values/indices: (n, k) — per-silo (value, global flat index) pairs,
@@ -21,12 +22,18 @@ def scatter_accumulate_ref(values: jax.Array, indices: jax.Array,
     Negative indices are remapped BEFORE the scatter (jax normalizes
     them ahead of the mode="drop" bounds check). ``symmetric`` mirrors
     lower-triangular payloads (``c + c.T - diag(diag(c))`` — the
-    two-pass oracle for the kernel's fused mirror)."""
+    two-pass oracle for the kernel's fused mirror). ``init`` seeds the
+    accumulator with a prior (d0, d1) partial sum: the streamed path
+    scatters each silo slab into the running total, which keeps the
+    per-cell add order identical to one scatter over the whole stacked
+    stream (the symmetric mirror must then be applied by the caller ONCE
+    after the last slab, never per slab)."""
     d0, d1 = (int(s) for s in shape)
     n_out = d0 * d1
     idx = jnp.where(indices < 0, n_out, indices).reshape(-1)
-    flat = jnp.zeros((n_out,), values.dtype).at[idx].add(
-        values.reshape(-1), mode="drop")
+    acc = (jnp.zeros((n_out,), values.dtype) if init is None
+           else init.reshape(n_out).astype(values.dtype))
+    flat = acc.at[idx].add(values.reshape(-1), mode="drop")
     out = flat.reshape(d0, d1)
     if symmetric:
         out = out + out.T - jnp.diag(jnp.diag(out))

@@ -226,6 +226,22 @@ def make_activation_sharder(mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# Server accumulator placement
+# ---------------------------------------------------------------------------
+
+
+def accumulator_spec(mesh: Mesh, shape, axis: str = "data") -> NamedSharding:
+    """Placement of the server's dense (d0, d1) aggregation accumulator:
+    row-sharded over ``mesh[axis]`` — the layout
+    ``sharded_scatter_accumulate`` (kernels/scatter_accum/sharded.py)
+    produces, each device owning a contiguous row window. Degrades to
+    replication when d0 doesn't divide the axis extent, like every other
+    rule here (the sharded scatter itself then refuses; callers fall
+    back to the streamed single-device path)."""
+    return NamedSharding(mesh, _spec(mesh, shape, (axis, None)))
+
+
+# ---------------------------------------------------------------------------
 # Batch / cache specs
 # ---------------------------------------------------------------------------
 

@@ -56,7 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import struct
-from typing import List
+from typing import Iterator
 
 import numpy as np
 
@@ -565,20 +565,28 @@ def decode(data: bytes, shape=None):
 
 
 def encode_silos(payloads, value_format: str = "raw",
-                 sort_indices: bool = True) -> List[bytes]:
+                 sort_indices: bool = True) -> Iterator[bytes]:
     """Encode a STACKED payload (leading silo axis, the output of
     ``jax.vmap(comp.compress)``) one silo at a time — one byte buffer
-    per silo, which is the unit the traffic model prices."""
+    per silo, which is the unit the traffic model prices.
+
+    LAZY: yields each silo's buffer as it is encoded instead of
+    materializing all n at once — at cross-device cohort sizes
+    (n = 10k+) the encoded buffers would otherwise dominate host
+    memory. Wrap in ``list(...)`` when random access is needed. The
+    stacked arrays are pulled to host once, up front (one copy of the
+    wire-sized payload, which the caller already holds); only the
+    per-silo buffers stream."""
     import jax
 
     leaves = jax.tree_util.tree_leaves(payloads)
     if not leaves:
-        return []
+        return
     n = int(leaves[0].shape[0])
     host = jax.tree_util.tree_map(_np, payloads)
-    return [encode(jax.tree_util.tree_map(lambda a: a[i], host),
-                   value_format=value_format, sort_indices=sort_indices)
-            for i in range(n)]
+    for i in range(n):
+        yield encode(jax.tree_util.tree_map(lambda a: a[i], host),
+                     value_format=value_format, sort_indices=sort_indices)
 
 
 def encoded_bytes(payload, value_format: str = "raw") -> int:

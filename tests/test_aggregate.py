@@ -30,7 +30,6 @@ from repro.core.compressors import (
     available_compressors,
     make_compressor,
     payload_bits,
-    scale_payload,
 )
 from repro.core.objectives import batch_grad, batch_hess
 from repro.data.synthetic import make_synthetic
@@ -211,15 +210,16 @@ def test_aggregate_blocksparse_nonmultiple_shape_cropped():
 
 @pytest.mark.parametrize("family", ["topk", "rankr", "dithering", "natural"])
 def test_scale_payload_masked_mean(family):
-    """aggregate(scale_payload(p, w)) == mean_i w_i * decompress_i — the
+    """aggregate(p, shape, weights=w) == mean_i w_i * decompress_i — the
     partial-participation masking used by FedNL-PP/PPBC, across wire
-    formats (values / low-rank middle / dithering signs)."""
+    formats (values / low-rank middle / dithering signs); the weighting
+    is ``scale_payload`` applied inside the aggregate entry point."""
     with enable_x64():
         comp = make_compressor(family, _FAMILY_LEVELS[family])
         shape = _family_shape(family)
         _, payloads = _stacked_payloads(comp, shape, seed=4)
         w = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
-        out = comp.aggregate(scale_payload(payloads, w), shape)
+        out = comp.aggregate(payloads, shape, weights=w)
         dec = jax.vmap(lambda p: comp.decompress(p, shape))(payloads)
         ref = jnp.mean(w.reshape((-1,) + (1,) * len(shape)) * dec, axis=0)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
@@ -232,8 +232,8 @@ def test_scale_payload_masked_mean(family):
 class _FallbackTopK(TopK):
     """TopK forced onto the generic decompress-then-mean server."""
 
-    def aggregate(self, payloads, shape):
-        return Compressor.aggregate(self, payloads, shape)
+    def aggregate(self, payloads, shape, weights=None):
+        return Compressor.aggregate(self, payloads, shape, weights=weights)
 
 
 @pytest.fixture(scope="module")
@@ -490,3 +490,122 @@ def test_fednl_fused_uplink_run_matches_unfused(problem):
         np.testing.assert_allclose(np.asarray(runs["fused"]),
                                    np.asarray(runs["unfused"]),
                                    rtol=0, atol=1e-11)
+
+
+# -- cross-device scale: streamed dispatch + sharded accumulator --------------
+
+
+def test_aggregate_streams_above_vmem_budget():
+    """A concrete payload stack whose (value, index) pair stream
+    outgrows the kernel VMEM budget must take the streamed silo-slab
+    path — and land BITWISE on the stacked kernel over the same scaled
+    pairs. Traced stacks (inside jit) must keep the stacked path."""
+    from repro.core.compressors import _should_stream, scale_payload
+    from repro.kernels import VMEM_BUDGET_BYTES
+    from repro.kernels.scatter_accum import scatter_accumulate
+
+    with enable_x64():
+        n, k, d = 700, 1024, 64
+        pair = jnp.dtype(jnp.float64).itemsize + jnp.dtype(jnp.int32).itemsize
+        assert n * k * pair > VMEM_BUDGET_BYTES  # the premise
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        pay = SparsePayload(
+            values=jax.random.normal(ks[0], (n, k), dtype=jnp.float64),
+            indices=jax.random.randint(ks[1], (n, k), 0, d * d,
+                                       dtype=jnp.int32),
+            universe=d * d)
+        w = jax.random.uniform(ks[2], (n,), dtype=jnp.float64)
+        assert _should_stream(pay.values, pay.indices)
+        assert not _should_stream(
+            jax.ShapeDtypeStruct((n, k), jnp.float64),
+            jax.ShapeDtypeStruct((n, k), jnp.int32))
+
+        comp = TopK(k=k)
+        streamed = comp.aggregate(pay, (d, d), weights=w)  # eager: streams
+        scaled = scale_payload(pay, w)
+        stacked = (scatter_accumulate(scaled.values, scaled.indices,
+                                      (d, d)) / n).reshape(d, d)
+        np.testing.assert_array_equal(np.asarray(streamed),
+                                      np.asarray(stacked))
+        # inside jit the stack is a tracer: stacked kernel, same answer
+        # to f64 tolerance (XLA may fuse the x*w and /n multiplies)
+        jitted = jax.jit(lambda p: comp.aggregate(p, (d, d), weights=w))(pay)
+        np.testing.assert_allclose(np.asarray(jitted), np.asarray(streamed),
+                                   rtol=0, atol=1e-15)
+
+
+def test_aggregate_weight_zero_silo_bit_exact():
+    """A weight-0 silo contributes nothing, bit-exactly: zeroing silo
+    j's weight gives the same aggregate as padding silo j's indices
+    out of the payload entirely."""
+    with enable_x64():
+        comp = TopK(k=17)
+        shape = (12, 12)
+        _, pay = _stacked_payloads(comp, shape)
+        w = jnp.asarray([1.0, 0.7, 0.0, 1.0, 0.3])
+        dropped = SparsePayload(
+            values=pay.values, universe=pay.universe,
+            indices=pay.indices.at[2].set(-1))
+        w_one = w.at[2].set(1.0)  # padding drops silo 2 regardless
+        out = comp.aggregate(pay, shape, weights=w)
+        ref = comp.aggregate(dropped, shape, weights=w_one)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_sharded_scatter_accumulate_four_devices():
+    """The mesh-sharded accumulator on 4 forced host devices: each
+    device scatters only its owned row window, and the gathered result
+    equals the unsharded scatter EXACTLY — plain, and symmetric via the
+    pre-shard mirror expansion. Subprocess so the forced device count
+    doesn't leak into this session."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        jax.config.update("jax_enable_x64", True)
+        from jax.sharding import PartitionSpec as P
+        from repro.kernels.scatter_accum import (
+            mirror_expand_pairs, scatter_accumulate,
+            sharded_scatter_accumulate)
+        from repro.launch.sharding import accumulator_spec
+
+        mesh = jax.make_mesh((4,), ("data",))
+        shape = (16, 16)
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        vals = jax.random.normal(ks[0], (6, 20), dtype=jnp.float64)
+        idx = jax.random.randint(ks[1], (6, 20), 0, 256, dtype=jnp.int32)
+        idx = idx.at[:, -3:].set(-1)   # wire padding stays inert
+        idx = idx.at[4].set(-1)        # one dropped silo
+
+        out = sharded_scatter_accumulate(vals, idx, shape, mesh)
+        ref = scatter_accumulate(vals, idx, shape)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+        sym = sharded_scatter_accumulate(vals, idx, shape, mesh,
+                                         symmetric=True)
+        mv, mi = mirror_expand_pairs(vals, idx, 16)
+        np.testing.assert_array_equal(
+            np.asarray(sym), np.asarray(scatter_accumulate(mv, mi, shape)))
+        base = np.asarray(ref)
+        two_pass = base + base.T - np.diag(np.diag(base))
+        np.testing.assert_allclose(np.asarray(sym), two_pass,
+                                   rtol=0, atol=1e-14)
+
+        spec = accumulator_spec(mesh, shape)
+        assert spec.spec == P("data", None), spec.spec
+        rep = accumulator_spec(mesh, (15, 16))   # 15 % 4 != 0: replicate
+        assert rep.spec == P(None, None), rep.spec
+        try:
+            sharded_scatter_accumulate(vals, idx, (15, 16), mesh)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("15-row accumulator must refuse 4-way")
+        print("SHARDED_SCATTER_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "SHARDED_SCATTER_OK" in out.stdout, out.stdout + out.stderr

@@ -45,10 +45,13 @@ def _oracles(problem):
 # of available_methods() must appear here — a new method without a
 # working factory fails this test.
 def _roundtrip_params(d):
+    from repro.core import CohortSpec
+
     topk = ("topk", d)
     return {
         "fednl": dict(option=1, mu=1e-3),
         "fednl-pp": dict(tau=2),
+        "fednl-cohort": dict(cohort=CohortSpec(cohort=3)),
         "fednl-cr": dict(l_star=1.0),
         "fednl-ls": dict(mu=1e-3),
         "fednl-bc": dict(model_compressor=topk, p=0.9, option=1, mu=1e-3),

@@ -553,3 +553,72 @@ def test_scatter_accum_symmetric_diagonal_not_doubled():
     plain = scatter_accumulate(vals, diag_idx[None, :], (d, d),
                                use_pallas=True, interpret=True)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(plain))
+
+
+# -- streamed silo-slab scatter-accumulate ------------------------------------
+
+
+def _pair_stream(n, k, shape, seed=0, pad_rows=(), dtype=jnp.float32):
+    d0, d1 = shape
+    kv, ki = jax.random.split(jax.random.PRNGKey(seed))
+    vals = jax.random.normal(kv, (n, k), dtype=dtype)
+    idx = jax.random.randint(ki, (n, k), 0, d0 * d1, dtype=jnp.int32)
+    for r in pad_rows:
+        idx = idx.at[r].set(-1)  # all-padding silo (e.g. dropped client)
+    return vals, idx
+
+
+@pytest.mark.parametrize("silo_chunk", [1, 2, 3, 7, None])
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_streamed_matches_stacked_bitwise(silo_chunk, symmetric):
+    """The streamed silo-slab path must be BITWISE equal to the stacked
+    scatter on the portable path — including slabs that are entirely
+    padding (silos 10 and 11 form one all-padding chunk at
+    silo_chunk=2) and across every chunk-boundary alignment."""
+    from repro.kernels.scatter_accum import streamed_scatter_accumulate
+
+    shape = (24, 24)
+    vals, idx = _pair_stream(13, 40, shape, pad_rows=(3, 10, 11, 12))
+    stacked = scatter_accumulate(vals, idx, shape, use_pallas=False,
+                                 symmetric=symmetric)
+    streamed = streamed_scatter_accumulate(
+        vals, idx, shape, silo_chunk=silo_chunk, use_pallas=False,
+        symmetric=symmetric)
+    np.testing.assert_array_equal(np.asarray(streamed),
+                                  np.asarray(stacked))
+
+
+@pytest.mark.parametrize("tile", [None, (8, 8)])
+@pytest.mark.parametrize("silo_chunk", [2, 5])
+def test_streamed_matches_stacked_forced_pallas(tile, silo_chunk):
+    """Forced Pallas dispatch (interpret mode — the kernel bodies run):
+    chaining silo slabs through the init-accumulator kernels replays
+    the stacked kernel's add sequence exactly."""
+    from repro.kernels.scatter_accum import streamed_scatter_accumulate
+
+    shape = (16, 16)
+    vals, idx = _pair_stream(7, 12, shape, pad_rows=(4,))
+    stacked = scatter_accumulate(vals, idx, shape, use_pallas=True,
+                                 interpret=True, tile=tile, chunk=8)
+    streamed = streamed_scatter_accumulate(
+        vals, idx, shape, silo_chunk=silo_chunk, use_pallas=True,
+        interpret=True, tile=tile, chunk=8)
+    np.testing.assert_array_equal(np.asarray(streamed),
+                                  np.asarray(stacked))
+
+
+def test_silo_chunk_for_respects_budget():
+    """The streaming rule: the largest silo slab whose (value, index)
+    pair stream still fits the shared kernel VMEM budget — never zero,
+    even when one silo alone overflows the budget."""
+    from repro.kernels import VMEM_BUDGET_BYTES
+    from repro.kernels.scatter_accum import silo_chunk_for
+
+    k = 1024
+    pair = jnp.dtype(jnp.float64).itemsize + jnp.dtype(jnp.int32).itemsize
+    chunk = silo_chunk_for(k, jnp.float64)
+    assert chunk >= 1
+    assert chunk * k * pair <= VMEM_BUDGET_BYTES
+    assert (chunk + 1) * k * pair > VMEM_BUDGET_BYTES
+    # a single monster silo still streams, one silo at a time
+    assert silo_chunk_for(10 * VMEM_BUDGET_BYTES, jnp.float64) == 1

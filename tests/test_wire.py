@@ -218,12 +218,18 @@ def test_stacked_payload_must_use_encode_silos():
 
 def test_encode_silos_per_silo_buffers():
     """A vmapped-over-silos stack (the engine's uplink unit) encodes to
-    one buffer per silo, each decoding to that silo's canonical slice."""
+    one buffer per silo, each decoding to that silo's canonical slice.
+    ``encode_silos`` is a LAZY generator (cross-device cohorts encode
+    10k+ buffers — they must stream, not materialize)."""
+    import types
+
     n = 4
     comp = TopK(k=3 * D)
     diffs = jax.random.normal(jax.random.PRNGKey(0), (n, D, D))
     stack = jax.vmap(comp.compress)(diffs)
-    bufs = encode_silos(stack)
+    gen = encode_silos(stack)
+    assert isinstance(gen, types.GeneratorType)
+    bufs = list(gen)
     assert len(bufs) == n
     for i, buf in enumerate(bufs):
         single = comp.compress(diffs[i])
